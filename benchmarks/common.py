@@ -1,0 +1,86 @@
+"""Shared helpers for the paper-figure benchmarks."""
+
+from __future__ import annotations
+
+import csv
+import os
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import baseline_less, eclipse_decompose, lower_bound, spectra, spectra_pp
+
+OUT_DIR = Path(__file__).resolve().parent / "out"
+FAST = os.environ.get("REPRO_BENCH_FAST", "0") == "1"
+DELTAS = np.array([1e-4, 3e-4, 1e-3, 3e-3, 1e-2, 3e-2, 1e-1])
+SEEDS = 3 if FAST else 8  # paper: 50 runs / datapoint
+
+
+def algo_spectra(D, s, delta):
+    return spectra(D, s, delta).makespan
+
+
+def algo_spectra_no_eq(D, s, delta):
+    return spectra(D, s, delta, do_equalize=False).makespan
+
+
+def algo_spectra_pp(D, s, delta):
+    return spectra_pp(D, s, delta).makespan
+
+
+def algo_baseline(D, s, delta):
+    sched = baseline_less(D, s, delta)
+    sched.validate(D)
+    return sched.makespan()
+
+
+def algo_eclipse_variant(D, s, delta):
+    return spectra(
+        D, s, delta, decompose_fn=lambda M: eclipse_decompose(M, delta)
+    ).makespan
+
+
+def algo_lb(D, s, delta):
+    return lower_bound(D, s, delta)
+
+
+def sweep(workload_fn, algos, s_values, deltas=DELTAS, seeds=None):
+    """→ rows of dict(workload-ready) mean makespans over seeds."""
+    seeds = SEEDS if seeds is None else seeds
+    rows = []
+    for s in s_values:
+        for delta in deltas:
+            acc = {name: [] for name in algos}
+            for seed in range(seeds):
+                D = workload_fn(rng=np.random.default_rng(seed))
+                for name, fn in algos.items():
+                    acc[name].append(fn(D, s, float(delta)))
+            row = {"s": s, "delta": float(delta)}
+            row.update({name: float(np.mean(v)) for name, v in acc.items()})
+            rows.append(row)
+    return rows
+
+
+def write_csv(path: Path, rows: list[dict]) -> None:
+    path.parent.mkdir(parents=True, exist_ok=True)
+    if not rows:
+        return
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+        w.writeheader()
+        w.writerows(rows)
+
+
+def ratio(rows: list[dict], a: str, b: str) -> float:
+    """Geometric-mean ratio a/b across sweep rows (the paper's 'average')."""
+    vals = [r[a] / r[b] for r in rows if r.get(b, 0) > 0]
+    return float(np.exp(np.mean(np.log(vals)))) if vals else float("nan")
+
+
+def timed(fn, *args, reps: int = 1, **kw):
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / reps
+    return out, dt

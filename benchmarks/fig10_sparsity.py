@@ -1,0 +1,61 @@
+"""Fig. 10: sensitivity to sparsity — m flows per port, δ = 0.04."""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+from .common import (
+    OUT_DIR,
+    SEEDS,
+    algo_baseline,
+    algo_eclipse_variant,
+    algo_lb,
+    algo_spectra,
+    ratio,
+    timed,
+    write_csv,
+)
+
+M_VALUES = (4, 8, 12, 16, 24, 32)
+DELTA = 0.04
+ALGOS = {
+    "spectra": algo_spectra,
+    "baseline": algo_baseline,
+    "spectra_eclipse": algo_eclipse_variant,
+    "lb": algo_lb,
+}
+
+
+def _sweep_m(s: int):
+    from repro.traffic.workloads import benchmark_workload
+
+    rows = []
+    for m in M_VALUES:
+        num_big = max(1, m // 4)
+        wfn = functools.partial(benchmark_workload, m=m, num_big=num_big)
+        acc = {name: [] for name in ALGOS}
+        for seed in range(SEEDS):
+            D = wfn(rng=np.random.default_rng(seed))
+            for name, fn in ALGOS.items():
+                acc[name].append(fn(D, s, DELTA))
+        row = {"s": s, "m": m}
+        row.update({k: float(np.mean(v)) for k, v in acc.items()})
+        rows.append(row)
+    return rows
+
+
+def run():
+    data, dt = timed(lambda: _sweep_m(4) + _sweep_m(2))
+    write_csv(OUT_DIR / "fig10_sparsity.csv", data)
+    return [
+        {
+            "name": "fig10_sparsity",
+            "us_per_call": f"{1e6 * dt / max(len(data), 1):.0f}",
+            "derived": (
+                f"baseline/spectra={ratio(data, 'baseline', 'spectra'):.2f}x;"
+                f"eclipse/spectra={ratio(data, 'spectra_eclipse', 'spectra'):.2f}x"
+            ),
+        }
+    ]

@@ -1,0 +1,48 @@
+"""Fig. 6: makespan vs δ on the GPT and MoE AI workloads, s ∈ {2, 4}.
+
+Paper's claims to validate: SPECTRA ≈ 1.4× (GPT) / 1.9× (MoE) shorter than
+BASELINE on average; the ECLIPSE-based DECOMPOSE is ≈1.1× (GPT) / 1.8× (MoE)
+worse than SPECTRA; SPECTRA tracks the lower bound.
+"""
+
+from __future__ import annotations
+
+from .common import (
+    OUT_DIR,
+    algo_baseline,
+    algo_eclipse_variant,
+    algo_lb,
+    algo_spectra,
+    ratio,
+    sweep,
+    timed,
+    write_csv,
+)
+
+ALGOS = {
+    "spectra": algo_spectra,
+    "baseline": algo_baseline,
+    "spectra_eclipse": algo_eclipse_variant,
+    "lb": algo_lb,
+}
+
+
+def run():
+    from repro.traffic.workloads import gpt3b_workload, moe_workload
+
+    rows_out = []
+    for wname, wfn in (("gpt", gpt3b_workload), ("moe", moe_workload)):
+        data, dt = timed(sweep, wfn, ALGOS, s_values=(2, 4))
+        write_csv(OUT_DIR / f"fig6_{wname}.csv", data)
+        rows_out.append(
+            {
+                "name": f"fig6_{wname}",
+                "us_per_call": f"{1e6 * dt / max(len(data), 1):.0f}",
+                "derived": (
+                    f"baseline/spectra={ratio(data, 'baseline', 'spectra'):.2f}x;"
+                    f"eclipse/spectra={ratio(data, 'spectra_eclipse', 'spectra'):.2f}x;"
+                    f"spectra/lb={ratio(data, 'spectra', 'lb'):.3f}"
+                ),
+            }
+        )
+    return rows_out

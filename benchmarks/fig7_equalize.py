@@ -1,0 +1,28 @@
+"""Fig. 7: sensitivity to the EQUALIZE step (SPECTRA with/without).
+
+Paper: equalization matters for the skewed GPT traffic (large elements must
+be split), but not for the dense near-uniform MoE traffic.
+"""
+
+from __future__ import annotations
+
+from .common import OUT_DIR, algo_spectra, algo_spectra_no_eq, ratio, sweep, timed, write_csv
+
+ALGOS = {"spectra": algo_spectra, "spectra_no_eq": algo_spectra_no_eq}
+
+
+def run():
+    from repro.traffic.workloads import gpt3b_workload, moe_workload
+
+    rows_out = []
+    for wname, wfn in (("gpt", gpt3b_workload), ("moe", moe_workload)):
+        data, dt = timed(sweep, wfn, ALGOS, s_values=(2, 4))
+        write_csv(OUT_DIR / f"fig7_{wname}.csv", data)
+        rows_out.append(
+            {
+                "name": f"fig7_{wname}",
+                "us_per_call": f"{1e6 * dt / max(len(data), 1):.0f}",
+                "derived": f"no_eq/with_eq={ratio(data, 'spectra_no_eq', 'spectra'):.3f}x",
+            }
+        )
+    return rows_out

@@ -1,0 +1,41 @@
+"""Fig. 8: sensitivity to noise (σ = 0.3% vs 1%) on the AI workloads."""
+
+from __future__ import annotations
+
+import functools
+
+from .common import OUT_DIR, algo_eclipse_variant, algo_spectra, ratio, sweep, timed, write_csv
+
+ALGOS = {"spectra": algo_spectra, "spectra_eclipse": algo_eclipse_variant}
+
+
+def run():
+    from repro.traffic.workloads import gpt3b_workload, moe_workload
+
+    rows_out = []
+    cases = [
+        ("gpt_03", functools.partial(gpt3b_workload, noise=0.003)),
+        ("gpt_1", functools.partial(gpt3b_workload, noise=0.01)),
+        ("moe_03", functools.partial(moe_workload, noise=0.003)),
+        ("moe_1", functools.partial(moe_workload, noise=0.01)),
+    ]
+    results = {}
+    for wname, wfn in cases:
+        data, dt = timed(sweep, wfn, ALGOS, s_values=(2, 4))
+        write_csv(OUT_DIR / f"fig8_{wname}.csv", data)
+        results[wname] = (data, dt)
+    for fam in ("gpt", "moe"):
+        lo, dt_lo = results[f"{fam}_03"]
+        hi, dt_hi = results[f"{fam}_1"]
+        merged = [
+            {"s": a["s"], "delta": a["delta"], "hi": b["spectra"], "lo": a["spectra"]}
+            for a, b in zip(lo, hi)
+        ]
+        rows_out.append(
+            {
+                "name": f"fig8_{fam}",
+                "us_per_call": f"{1e6 * (dt_lo + dt_hi) / max(len(lo) + len(hi), 1):.0f}",
+                "derived": f"noise1pct/noise03pct={ratio(merged, 'hi', 'lo'):.3f}x",
+            }
+        )
+    return rows_out

@@ -1,0 +1,44 @@
+"""Fig. 9: the standard 100×100 benchmark workload vs δ, s ∈ {2, 4}.
+
+Paper: SPECTRA ≈ 2.4× shorter than BASELINE, ≈ 1.2× shorter than the
+ECLIPSE-decomposition variant, and close to the lower bound.
+"""
+
+from __future__ import annotations
+
+from .common import (
+    OUT_DIR,
+    algo_baseline,
+    algo_eclipse_variant,
+    algo_lb,
+    algo_spectra,
+    ratio,
+    sweep,
+    timed,
+    write_csv,
+)
+
+ALGOS = {
+    "spectra": algo_spectra,
+    "baseline": algo_baseline,
+    "spectra_eclipse": algo_eclipse_variant,
+    "lb": algo_lb,
+}
+
+
+def run():
+    from repro.traffic.workloads import benchmark_workload
+
+    data, dt = timed(sweep, benchmark_workload, ALGOS, s_values=(2, 4))
+    write_csv(OUT_DIR / "fig9_benchmark.csv", data)
+    return [
+        {
+            "name": "fig9_benchmark",
+            "us_per_call": f"{1e6 * dt / max(len(data), 1):.0f}",
+            "derived": (
+                f"baseline/spectra={ratio(data, 'baseline', 'spectra'):.2f}x;"
+                f"eclipse/spectra={ratio(data, 'spectra_eclipse', 'spectra'):.2f}x;"
+                f"spectra/lb={ratio(data, 'spectra', 'lb'):.3f}"
+            ),
+        }
+    ]

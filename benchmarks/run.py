@@ -1,0 +1,61 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark driver: python -m benchmarks.run [--fast]
+
+Runs every paper-figure benchmark (Fig. 6-11), the runtime table, the
+beyond-paper SPECTRA++ table, and — if dry-run artifacts exist under
+benchmarks/out/dryrun — the roofline summary. Writes per-figure CSVs to
+benchmarks/out/ and prints one ``name,us_per_call,derived`` line per table.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+
+def main() -> None:
+    if "--fast" in sys.argv:
+        os.environ["REPRO_BENCH_FAST"] = "1"
+
+    from . import (
+        fig6_ai_workloads,
+        fig7_equalize,
+        fig8_noise,
+        fig9_benchmark,
+        fig10_sparsity,
+        fig11_degree,
+        improved_table,
+        runtime_table,
+    )
+
+    modules = [
+        fig6_ai_workloads,
+        fig7_equalize,
+        fig8_noise,
+        fig9_benchmark,
+        fig10_sparsity,
+        fig11_degree,
+        runtime_table,
+        improved_table,
+    ]
+    try:  # roofline summary only if dry-run artifacts are present
+        from . import roofline_table
+
+        modules.append(roofline_table)
+    except ImportError:
+        pass
+
+    print("name,us_per_call,derived")
+    for mod in modules:
+        try:
+            rows = mod.run()
+        except Exception as exc:  # pragma: no cover
+            print(f"{mod.__name__.split('.')[-1]},nan,ERROR:{type(exc).__name__}:{exc}")
+            continue
+        for r in rows:
+            print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+        sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

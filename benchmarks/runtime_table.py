@@ -1,0 +1,43 @@
+"""§V-A runtime table: SPECTRA end-to-end runtimes per workload.
+
+Paper reports 1–14 ms on a 3.7 GHz Threadripper; we report mean/p95 here.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .common import FAST, OUT_DIR, write_csv
+
+
+def run():
+    from repro.core import spectra
+    from repro.traffic.workloads import benchmark_workload, gpt3b_workload, moe_workload
+
+    reps = 3 if FAST else 10
+    rows, out = [], []
+    for wname, wfn, s in (
+        ("gpt_s4", gpt3b_workload, 4),
+        ("moe_s4", moe_workload, 4),
+        ("benchmark_s4", benchmark_workload, 4),
+    ):
+        times = []
+        for seed in range(reps):
+            D = wfn(rng=np.random.default_rng(seed))
+            t0 = time.perf_counter()
+            spectra(D, s, 0.01, validate=False, compute_lb=False)
+            times.append(time.perf_counter() - t0)
+        mean_ms = 1e3 * float(np.mean(times))
+        p95_ms = 1e3 * float(np.percentile(times, 95))
+        rows.append({"workload": wname, "mean_ms": mean_ms, "p95_ms": p95_ms})
+        out.append(
+            {
+                "name": f"runtime_{wname}",
+                "us_per_call": f"{1e3 * mean_ms:.0f}",
+                "derived": f"p95_ms={p95_ms:.1f}",
+            }
+        )
+    write_csv(OUT_DIR / "runtime.csv", rows)
+    return out

@@ -1,0 +1,60 @@
+"""MoE expert-routing traffic → SPECTRA, two ways.
+
+1. *Measured*: run a reduced DeepSeek-style MoE for a few steps, read the
+   router's per-expert token counts (the framework measures them as part
+   of the train metrics), build the expert-to-expert demand matrix and
+   schedule it — this mirrors how the paper's Qwen-57B MoE workload was
+   collected on a real 64-GPU cluster.
+2. *Paper-scale*: the synthetic 64×64 Qwen-like matrix from
+   repro.traffic.workloads, swept over δ like Fig. 6(b).
+
+    PYTHONPATH=src python examples/moe_traffic_schedule.py
+"""
+
+import jax
+import numpy as np
+
+from repro.configs.registry import ARCHS
+from repro.core import baseline_less, lower_bound, spectra
+from repro.data.pipeline import make_stream
+from repro.models.registry import build_model
+from repro.parallel.steps import make_train_step
+from repro.train.loop import _demand_from_stats
+from repro.train.optimizer import AdamW, cosine_schedule
+from repro.traffic.workloads import moe_workload
+
+# ---------------------------------------------------------------- measured
+print("=== measured routing from a live (reduced) MoE model ===")
+cfg = ARCHS["deepseek-moe-16b"].reduced()
+model = build_model(cfg, attn_impl="chunked")
+opt = AdamW(schedule=cosine_schedule(1e-3, 10))
+stream = make_stream(cfg.vocab_size, 64, 8)
+step = jax.jit(make_train_step(model, opt))
+params = model.init(jax.random.PRNGKey(0))
+opt_state = opt.init(params)
+for i in range(3):
+    params, opt_state, metrics = step(params, opt_state, stream.next_batch(i))
+load = np.asarray(metrics["expert_load"])
+print(f"expert token loads (E={len(load)}): {load.astype(int).tolist()}")
+D = _demand_from_stats(num_racks=8, metrics={"expert_load": load}, step=0)
+D = D / D.max()
+for s, delta in [(2, 0.01), (4, 0.01), (4, 0.05)]:
+    res = spectra(D, s, delta)
+    bl = baseline_less(D, s, delta)
+    print(f"  s={s} δ={delta}: SPECTRA {res.makespan:.4f} "
+          f"(LB {res.lower_bound:.4f}, gap {res.optimality_gap:.3f}x) "
+          f"BASELINE {bl.makespan():.4f} "
+          f"→ {bl.makespan()/res.makespan:.2f}x longer")
+
+# ------------------------------------------------------------- paper-scale
+print("\n=== paper-scale 64×64 Qwen-MoE-like matrix (Fig. 6b setting) ===")
+D = moe_workload(rng=np.random.default_rng(0))
+for s in (2, 4):
+    for delta in (1e-3, 1e-2, 1e-1):
+        res = spectra(D, s, delta)
+        bl = baseline_less(D, s, delta)
+        print(f"  s={s} δ={delta:g}: SPECTRA {res.makespan:.4f} "
+              f"LB {res.lower_bound:.4f} BASELINE {bl.makespan():.4f} "
+              f"({bl.makespan()/res.makespan:.2f}x)")
+print("\nNote how SPECTRA hugs the lower bound on dense MoE traffic — the "
+      "paper's Fig. 6(b) observation.")

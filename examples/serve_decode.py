@@ -1,0 +1,29 @@
+"""Batched serving demo: KV-cache decode across architecture families.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.registry import ARCHS
+from repro.models.registry import build_model
+from repro.serve.engine import DecodeEngine
+
+for arch in ("granite-3-8b", "mamba2-2.7b", "zamba2-1.2b"):
+    cfg = ARCHS[arch].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = DecodeEngine(model, params, max_len=96)
+    prompts = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (4, 16)
+    ).astype(np.int32)
+    eng.generate(prompts, 2)  # warmup/compile
+    t0 = time.perf_counter()
+    res = eng.generate(prompts, 48)
+    dt = time.perf_counter() - t0
+    n = 4 * 48
+    print(f"{arch:>16} (reduced): {n} tokens in {dt:.2f}s → "
+          f"{n/dt:6.1f} tok/s | sample: {res.tokens[0, 16:24].tolist()}")

@@ -1,0 +1,86 @@
+"""End-to-end driver: train a ~100M-param GPT while SPECTRA schedules the
+fabric — the paper's deployment scenario in one script.
+
+Every --ocs-every steps the training loop emits the rack-level demand
+matrix of its parallelism plan, and the SPECTRA controller schedules it on
+the parallel-OCS core, logging the collective completion time (CCT).
+
+    PYTHONPATH=src python examples/train_gpt_ocs.py              # ~100M run
+    PYTHONPATH=src python examples/train_gpt_ocs.py --tiny       # smoke
+"""
+
+import argparse
+import json
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import make_stream
+from repro.fabric.ocs import OCSFabric
+from repro.models.registry import build_model
+from repro.parallel.steps import make_train_step
+from repro.train.loop import LoopConfig, Trainer
+from repro.train.optimizer import AdamW, warmup_stable_decay
+
+
+def gpt_100m() -> ModelConfig:
+    # ~110M params: 12L × d768 × 12H, d_ff 3072, 32k vocab (GPT-2-small-ish).
+    return ModelConfig(
+        name="gpt-100m", family="dense", num_layers=12, d_model=768,
+        num_heads=12, num_kv_heads=12, d_ff=3072, vocab_size=32000,
+        dtype="float32",
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true", help="smoke-scale run")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ocs-every", type=int, default=20)
+    args = ap.parse_args()
+
+    cfg = gpt_100m()
+    steps = args.steps or 300
+    if args.tiny:
+        cfg = cfg.reduced()
+        steps = args.steps or 30
+
+    model = build_model(cfg, attn_impl="chunked")
+    params_count = sum(
+        int(x.size) for x in jax.tree.leaves(
+            jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+        )
+    )
+    print(f"model: {cfg.name}  params ≈ {params_count/1e6:.0f}M  "
+          f"steps={steps} batch={args.batch} seq={args.seq}")
+
+    opt = AdamW(schedule=warmup_stable_decay(3e-4 if not args.tiny else 3e-3,
+                                             steps))
+    stream = make_stream(cfg.vocab_size, args.seq, args.batch)
+    step_fn = jax.jit(make_train_step(model, opt))
+    fabric = OCSFabric(num_switches=4, reconfig_delay_s=20e-6)
+    loop_cfg = LoopConfig(
+        total_steps=steps, log_every=max(steps // 20, 1),
+        ocs_every=args.ocs_every, ocs_num_racks=8,
+    )
+    tr = Trainer(model, opt, stream, step_fn, loop_cfg, fabric=fabric)
+    state = tr.run(jax.random.PRNGKey(0))
+
+    print("\nloss curve (sampled):")
+    for h in state.history:
+        print(f"  step {h['step']:>4}  loss {h['loss']:.4f}  {h['time_s']*1e3:.0f} ms")
+    print("\nOCS controller log (SPECTRA on the DP gradient ring):")
+    for rec in state.cct_log[-5:]:
+        print(f"  step {rec['step']:>4}  CCT {rec['cct_s']*1e3:.3f} ms  "
+              f"makespan {rec['makespan']:.4f}  LB {rec['lb']:.4f}  "
+              f"{rec['configs']} circuits")
+    assert state.history[-1]["loss"] < state.history[0]["loss"]
+    print("\nOK: loss decreased and the optical fabric schedule stayed "
+          "within", f"{max(r['makespan']/max(r['lb'],1e-12) for r in state.cct_log):.2f}x",
+          "of the lower bound.")
+
+
+if __name__ == "__main__":
+    main()

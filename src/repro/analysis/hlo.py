@@ -1,0 +1,123 @@
+"""Parse collective ops + byte counts out of compiled (SPMD) HLO text.
+
+The compiled module is per-partition, so parsed tensor shapes are per-chip
+shards. Wire bytes per chip use standard ring-algorithm factors:
+
+    all-reduce          2·(g−1)/g · operand
+    all-gather          (g−1)/g · result
+    reduce-scatter      (g−1)/g · operand
+    all-to-all          (g−1)/g · operand
+    collective-permute  1 · operand
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(m: re.Match) -> int:
+    dt, dims = m.group(1), m.group(2)
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+@dataclass
+class CollectiveStats:
+    ops: dict = field(default_factory=lambda: defaultdict(int))
+    operand_bytes: dict = field(default_factory=lambda: defaultdict(int))
+    wire_bytes: dict = field(default_factory=lambda: defaultdict(float))
+
+    @property
+    def total_operand_bytes(self) -> int:
+        return sum(self.operand_bytes.values())
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(self.wire_bytes.values())
+
+    def as_dict(self) -> dict:
+        return {
+            "ops": dict(self.ops),
+            "operand_bytes": dict(self.operand_bytes),
+            "wire_bytes": {k: float(v) for k, v in self.wire_bytes.items()},
+            "total_operand_bytes": self.total_operand_bytes,
+            "total_wire_bytes": self.total_wire_bytes,
+        }
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_V2_RE.search(line)
+    if m:  # [num_groups, group_size] iota form
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_RE.search(line)
+    if m:
+        members = [x for x in m.group(1).split(",") if x.strip() != ""]
+        return max(len(members), 1)
+    return default
+
+
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[\w\[\],{}]+))\s+("
+    + "|".join(_COLLECTIVES)
+    + r")(-start|-done)?\("
+)
+
+
+def parse_collectives(hlo_text: str, default_group: int = 2) -> CollectiveStats:
+    """Sum collective bytes over a compiled HLO text module (per-chip view).
+
+    In optimized HLO the result type precedes the op name and operands are
+    bare ``%names``, so byte counts derive from the *largest* result shape
+    (for async tuple results that is the full gathered/reduced tensor; for
+    reduce-scatter the operand-shaped tuple member). Wire factors then apply
+    uniformly to that max shape.
+    """
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if not ls or "=" not in ls:
+            continue
+        m_op = _OP_RE.search(ls)
+        if not m_op:
+            continue
+        op = m_op.group(2)
+        if m_op.group(3) == "-done":  # async pair: count the -start only
+            continue
+        shapes = [_shape_bytes(m) for m in _SHAPE_RE.finditer(m_op.group(1))]
+        if not shapes:
+            continue
+        max_bytes = max(shapes)
+        g = _group_size(ls, default_group)
+        if op == "all-reduce":
+            wire = 2.0 * (g - 1) / g * max_bytes
+        elif op in ("all-gather", "reduce-scatter", "all-to-all",
+                    "ragged-all-to-all"):
+            wire = (g - 1) / g * max_bytes
+        else:  # collective-permute
+            wire = float(max_bytes)
+        stats.ops[op] += 1
+        stats.operand_bytes[op] += max_bytes
+        stats.wire_bytes[op] += wire
+    return stats

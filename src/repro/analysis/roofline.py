@@ -1,0 +1,133 @@
+"""Three-term roofline from the dry-run's compiled artifact (spec §Roofline).
+
+    compute term    = HLO_FLOPs_per_chip / peak_FLOP/s
+    memory term     = HLO_bytes_per_chip / HBM_bw
+    collective term = wire_bytes_per_chip / link_bw
+
+(The compiled SPMD module is per-partition, so cost_analysis and the HLO
+parse are already per-chip; the spec's "/ chips" is folded in.)
+
+MODEL_FLOPS = 6·N_active·tokens (+ exact attention-matmul FLOPs, windowed
+where the arch is windowed); useful_ratio = MODEL_FLOPS_per_chip/HLO_FLOPs
+catches remat/redundancy waste. roofline_fraction = ideal compute time on
+MODEL_FLOPS over the dominant term — the headline score per cell.
+"""
+
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass
+
+import jax
+
+from ..configs.base import ModelConfig, ShapeCfg
+from .hlo import parse_collectives
+
+TPU_V5E = {
+    "peak_flops_bf16": 197e12,  # per chip
+    "hbm_bw": 819e9,            # B/s per chip
+    "ici_bw": 50e9,             # B/s per link
+}
+
+
+def count_params(params_shape) -> tuple[int, int]:
+    """(total, routed-expert-only) parameter counts from the shape pytree."""
+    total, expert = 0, 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params_shape)[0]:
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+        names = [getattr(e, "key", None) for e in path]
+        if any(isinstance(k, str) and k.startswith("we_") for k in names):
+            expert += n
+    return total, expert
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeCfg, params_shape) -> float:
+    """6·N_active·D (+ attention score/PV matmuls), global per step."""
+    total, expert = count_params(params_shape)
+    n_active = total - expert
+    if cfg.moe is not None and expert:
+        n_active += expert * cfg.moe.top_k / cfg.moe.num_experts
+    tokens = shape.global_batch * (1 if shape.kind == "decode" else shape.seq_len)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    flops = mult * n_active * tokens
+
+    # Attention matmuls (QK^T + PV): 4·B·Hq·dh·Σ_q kv_len(q) per layer (fwd);
+    # ×3 for train (fwd+bwd). Σ_q kv: S²/2 causal-global, S·w local, S for
+    # a single decode query.
+    has_attn = cfg.family in ("dense", "moe", "vlm", "audio", "hybrid")
+    if has_attn:
+        dh, Hq = cfg.resolved_head_dim, cfg.num_heads
+        B, S = shape.global_batch, shape.seq_len
+        fwd_mult = 3.0 if shape.kind == "train" else 1.0
+        per = (cfg.pattern_local + cfg.pattern_global) if cfg.pattern_local else 1
+        n_local = (
+            cfg.num_layers * cfg.pattern_local // per if cfg.pattern_local else 0
+        )
+        n_global = cfg.num_layers + cfg.encoder_layers - n_local
+        if cfg.family == "hybrid" and cfg.attn_every:
+            n_local, n_global = 0, cfg.num_layers // cfg.attn_every
+        w = min(cfg.window or S, S)
+        if shape.kind == "decode":
+            sum_kv_global, sum_kv_local = float(S), float(w)
+        else:
+            sum_kv_global, sum_kv_local = S * S / 2.0, float(S) * w
+        flops += fwd_mult * 4 * B * Hq * dh * (
+            n_global * sum_kv_global + n_local * sum_kv_local
+        )
+    return flops
+
+
+@dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    hlo_flops_per_chip: float
+    hlo_bytes_per_chip: float
+    wire_bytes_per_chip: float
+    useful_ratio: float
+    roofline_fraction: float
+    collectives: dict
+
+    def as_dict(self):
+        return asdict(self)
+
+
+def analyze(compiled, cfg: ModelConfig, shape: ShapeCfg, n_chips: int,
+            params_shape, hw: dict = TPU_V5E) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older API returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    byte_keys = [k for k in cost if k.startswith("bytes accessed")]
+    hlo_bytes = max(float(cost[k]) for k in byte_keys) if byte_keys else 0.0
+    stats = parse_collectives(compiled.as_text())
+
+    compute_s = flops / hw["peak_flops_bf16"]
+    memory_s = hlo_bytes / hw["hbm_bw"]
+    collective_s = stats.total_wire_bytes / hw["ici_bw"]
+    terms = {
+        "compute": compute_s, "memory": memory_s, "collective": collective_s
+    }
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape, params_shape)
+    mf_per_chip = mf / n_chips
+    ideal_s = mf_per_chip / hw["peak_flops_bf16"]
+    bound = max(terms.values())
+    return Roofline(
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        dominant=dominant,
+        model_flops=mf,
+        hlo_flops_per_chip=flops,
+        hlo_bytes_per_chip=hlo_bytes,
+        wire_bytes_per_chip=stats.total_wire_bytes,
+        useful_ratio=(mf_per_chip / flops) if flops else 0.0,
+        roofline_fraction=(ideal_s / bound) if bound > 0 else 0.0,
+        collectives=stats.as_dict(),
+    )

@@ -1,0 +1,6 @@
+"""Config module for --arch command-r-35b (exact dims in registry.py)."""
+
+from .registry import ARCHS
+
+CONFIG = ARCHS["command-r-35b"]
+REDUCED = CONFIG.reduced()

@@ -1,0 +1,6 @@
+"""Config module for --arch deepseek-moe-16b (exact dims in registry.py)."""
+
+from .registry import ARCHS
+
+CONFIG = ARCHS["deepseek-moe-16b"]
+REDUCED = CONFIG.reduced()

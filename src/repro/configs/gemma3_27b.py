@@ -1,0 +1,6 @@
+"""Config module for --arch gemma3-27b (exact dims in registry.py)."""
+
+from .registry import ARCHS
+
+CONFIG = ARCHS["gemma3-27b"]
+REDUCED = CONFIG.reduced()

@@ -1,0 +1,6 @@
+"""Config module for --arch granite-3-8b (exact dims in registry.py)."""
+
+from .registry import ARCHS
+
+CONFIG = ARCHS["granite-3-8b"]
+REDUCED = CONFIG.reduced()

@@ -1,0 +1,6 @@
+"""Config module for --arch mamba2-2.7b (exact dims in registry.py)."""
+
+from .registry import ARCHS
+
+CONFIG = ARCHS["mamba2-2.7b"]
+REDUCED = CONFIG.reduced()

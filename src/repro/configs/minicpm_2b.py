@@ -1,0 +1,6 @@
+"""Config module for --arch minicpm-2b (exact dims in registry.py)."""
+
+from .registry import ARCHS
+
+CONFIG = ARCHS["minicpm-2b"]
+REDUCED = CONFIG.reduced()

@@ -1,0 +1,6 @@
+"""Config module for --arch qwen2-vl-2b (exact dims in registry.py)."""
+
+from .registry import ARCHS
+
+CONFIG = ARCHS["qwen2-vl-2b"]
+REDUCED = CONFIG.reduced()

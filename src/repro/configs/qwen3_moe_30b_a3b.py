@@ -1,0 +1,6 @@
+"""Config module for --arch qwen3-moe-30b-a3b (exact dims in registry.py)."""
+
+from .registry import ARCHS
+
+CONFIG = ARCHS["qwen3-moe-30b-a3b"]
+REDUCED = CONFIG.reduced()

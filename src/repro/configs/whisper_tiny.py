@@ -1,0 +1,6 @@
+"""Config module for --arch whisper-tiny (exact dims in registry.py)."""
+
+from .registry import ARCHS
+
+CONFIG = ARCHS["whisper-tiny"]
+REDUCED = CONFIG.reduced()

@@ -1,0 +1,6 @@
+"""Config module for --arch zamba2-1.2b (exact dims in registry.py)."""
+
+from .registry import ARCHS
+
+CONFIG = ARCHS["zamba2-1.2b"]
+REDUCED = CONFIG.reduced()

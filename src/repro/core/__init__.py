@@ -1,0 +1,32 @@
+"""SPECTRA core: the paper's contribution (DECOMPOSE / SCHEDULE / EQUALIZE).
+
+Public API:
+    spectra, spectra_pp        — full pipelines (paper-faithful / improved)
+    decompose, Decomposition   — Alg. 1 + REFINE (Alg. 2)
+    schedule_lpt, equalize     — Alg. 3, Alg. 4
+    lower_bound                — §IV Theorems 1-2 + Property 2
+    baseline_less, eclipse_decompose — §V comparison algorithms
+"""
+
+from .baselines import baseline_less, eclipse_decompose, less_split
+from .decompose import Decomposition, decompose, degree, refine_greedy, refine_lp, refine_signed
+from .equalize import equalize
+from .lower_bounds import lb_theorem1, lb_theorem2, lower_bound
+from .matching import (
+    hungarian_min_cost,
+    max_weight_perfect_matching,
+    mwm_node_coverage,
+    perm_matrix,
+)
+from .improved import local_search, schedule_wrap, spectra_pp
+from .schedule import ParallelSchedule, SwitchSchedule, schedule_lpt
+from .spectra import SpectraResult, spectra
+
+__all__ = [
+    "Decomposition", "ParallelSchedule", "SpectraResult", "SwitchSchedule",
+    "baseline_less", "decompose", "degree", "eclipse_decompose", "equalize",
+    "hungarian_min_cost", "lb_theorem1", "lb_theorem2", "less_split",
+    "local_search", "lower_bound", "max_weight_perfect_matching",
+    "mwm_node_coverage", "perm_matrix", "refine_greedy", "refine_lp",
+    "refine_signed", "schedule_lpt", "schedule_wrap", "spectra", "spectra_pp",
+]

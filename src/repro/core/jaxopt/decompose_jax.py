@@ -1,0 +1,137 @@
+"""On-device (TPU) SPECTRA DECOMPOSE + LPT SCHEDULE, fully in JAX.
+
+Mirrors ``repro.core.decompose``/``schedule`` with dense array state inside
+``lax.while_loop``/``scan`` so the controller's scheduling computation can run
+on the accelerator itself and be ``vmap``-ed over batches of demand matrices
+(DESIGN.md §4). The constrained MWM uses the ε-scaling auction solver; the
+node-coverage constraint is encoded in the weights (M-bonus), exactly as in
+the numpy path.
+
+The final EQUALIZE step stays on the host (it is O(k·s) list surgery on the
+emitted schedule — negligible next to the k MWM solves): use
+``to_decomposition`` + ``repro.core.schedule_lpt`` + ``repro.core.equalize``
+to materialize a concrete schedule.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .auction import auction_maximize
+from ..decompose import Decomposition
+
+
+class JaxDecomposition(NamedTuple):
+    perms: jax.Array   # (n, n) int32; row r = permutation of round r (padded)
+    alphas: jax.Array  # (n,) float32; 0 for padded rounds
+    k: jax.Array       # () int32: number of real rounds
+    converged: jax.Array  # () bool: all auctions converged
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def decompose_jax(D: jax.Array, *, use_kernel: bool = False) -> JaxDecomposition:
+    """Exactly-k decomposition of D (Alg. 1 + greedy REFINE), on device."""
+    D = D.astype(jnp.float32)
+    n = D.shape[0]
+    arange = jnp.arange(n)
+
+    def cond(st):
+        _, S_rem, _, _, i, _ = st
+        return S_rem.any() & (i < n)
+
+    def body(st):
+        D_rem, S_rem, perms, alphas, i, conv = st
+        row_deg = S_rem.sum(axis=1)
+        col_deg = S_rem.sum(axis=0)
+        k = jnp.maximum(row_deg.max(), col_deg.max())
+        crit_r = (row_deg == k) & (k > 0)
+        crit_c = (col_deg == k) & (k > 0)
+        base = jnp.maximum(D_rem, 0.0)
+        M = base.sum() + 1.0
+        bonus = M * (crit_r[:, None].astype(jnp.float32) + crit_c[None, :])
+        W = base + jnp.where(S_rem, bonus, 0.0)
+        perm, ok = auction_maximize(W, use_kernel=use_kernel)
+        newly = S_rem[arange, perm]
+        vals = jnp.where(newly, D_rem[arange, perm], jnp.inf)
+        alpha = vals.min()
+        alpha = jnp.where(jnp.isfinite(alpha), alpha, 0.0)
+        D_rem = jnp.maximum(D_rem.at[arange, perm].add(-alpha), 0.0)
+        S_rem = S_rem.at[arange, perm].set(False)
+        perms = perms.at[i].set(perm.astype(jnp.int32))
+        alphas = alphas.at[i].set(alpha)
+        return D_rem, S_rem, perms, alphas, i + 1, conv & ok
+
+    init = (
+        D,
+        D > 0,
+        jnp.broadcast_to(arange[None, :], (n, n)).astype(jnp.int32),
+        jnp.zeros((n,), jnp.float32),
+        jnp.int32(0),
+        jnp.bool_(True),
+    )
+    D_rem, S_rem, perms, alphas, k, conv = jax.lax.while_loop(cond, body, init)
+
+    # Greedy REFINE (Alg. 2) over all rounds (padded rounds see zero residual).
+    R0 = D - (
+        jnp.zeros_like(D)
+        .at[jnp.broadcast_to(arange[None, :], (n, n)), perms]
+        .add(alphas[:, None] * (jnp.arange(n) < k)[:, None])
+    )
+    # Note: scatter above adds alpha_r at (row, perms[r, row]) for each round.
+    R0 = jnp.maximum(R0, 0.0)
+
+    def refine_body(r, carry):
+        R, alphas = carry
+        perm = perms[r]
+        d = jnp.maximum(R[arange, perm].max(), 0.0)
+        d = jnp.where(r < k, d, 0.0)
+        alphas = alphas.at[r].add(d)
+        R = R.at[arange, perm].add(-d)
+        R = jnp.maximum(R, 0.0)
+        return R, alphas
+
+    _, alphas = jax.lax.fori_loop(0, n, refine_body, (R0, alphas))
+    return JaxDecomposition(perms=perms, alphas=alphas, k=k, converged=conv)
+
+
+@functools.partial(jax.jit, static_argnames=("s",))
+def lpt_schedule_jax(dec: JaxDecomposition, s: int, delta: jax.Array):
+    """Alg. 3 on device: returns (assignment (n,), loads (s,), makespan)."""
+    n = dec.alphas.shape[0]
+    valid = jnp.arange(n) < dec.k
+    order = jnp.argsort(jnp.where(valid, -dec.alphas, jnp.inf))
+
+    def place(loads, idx):
+        a = dec.alphas[idx]
+        is_real = jnp.take(valid, idx)
+        h = jnp.argmin(loads)
+        loads = jnp.where(is_real, loads.at[h].add(delta + a), loads)
+        return loads, jnp.where(is_real, h, -1)
+
+    loads, assignment_sorted = jax.lax.scan(place, jnp.zeros((s,), jnp.float32), order)
+    assignment = jnp.full((n,), -1, jnp.int32).at[order].set(
+        assignment_sorted.astype(jnp.int32)
+    )
+    return assignment, loads, loads.max()
+
+
+def spectra_jax(D: jax.Array, s: int, delta: float, *, use_kernel: bool = False):
+    """DECOMPOSE + LPT on device; returns (dec, assignment, loads, makespan)."""
+    dec = decompose_jax(D, use_kernel=use_kernel)
+    assignment, loads, makespan = lpt_schedule_jax(dec, s, jnp.float32(delta))
+    return dec, assignment, loads, makespan
+
+
+def to_decomposition(dec: JaxDecomposition) -> Decomposition:
+    """Materialize on host as a numpy Decomposition (for EQUALIZE etc.)."""
+    import numpy as np
+
+    k = int(dec.k)
+    perms = np.asarray(dec.perms)[:k]
+    alphas = np.asarray(dec.alphas)[:k]
+    return Decomposition(perms=[p.astype(np.int64) for p in perms],
+                         alphas=[float(a) for a in alphas])

@@ -1,0 +1,55 @@
+"""Optical-circuit-switch fabric model (Fig. 1 topology).
+
+`n` racks, each ToR connected to every one of `s` parallel OCSes; a central
+controller periodically schedules the rack-level demand matrix D onto the
+switches. Demand is normalized so one unit of demand takes one unit of time
+on one switch link; ``OCSFabric.seconds()`` converts a makespan in those
+units to wall-clock seconds given per-link bandwidth.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import numpy as np
+
+from ..core.spectra import SpectraResult, spectra
+
+
+@dataclass(frozen=True)
+class OCSFabric:
+    """A datacenter core of s parallel optical circuit switches."""
+
+    num_switches: int  # s
+    reconfig_delay_s: float  # δ, in seconds
+    link_bandwidth_Bps: float = 400e9 / 8  # 400 Gb/s optical ports
+
+    def normalize(self, demand_bytes: np.ndarray) -> tuple[np.ndarray, float]:
+        """Demand in bytes → time units; returns (D, seconds-per-unit)."""
+        demand_bytes = np.asarray(demand_bytes, dtype=np.float64)
+        peak = float(demand_bytes.max())
+        if peak <= 0:
+            return demand_bytes, 0.0
+        unit_s = peak / self.link_bandwidth_Bps
+        return demand_bytes / peak, unit_s
+
+    def delta_units(self, unit_s: float) -> float:
+        """δ expressed in normalized demand-time units."""
+        if unit_s <= 0:
+            return 0.0
+        return self.reconfig_delay_s / unit_s
+
+    def schedule_bytes(
+        self,
+        demand_bytes: np.ndarray,
+        scheduler: Callable[..., SpectraResult] = spectra,
+        **kw,
+    ) -> tuple[SpectraResult, float]:
+        """Schedule a byte-demand matrix; returns (result, CCT seconds)."""
+        D, unit_s = self.normalize(demand_bytes)
+        if unit_s == 0.0:
+            res = scheduler(D, self.num_switches, 0.0, **kw)
+            return res, 0.0
+        res = scheduler(D, self.num_switches, self.delta_units(unit_s), **kw)
+        return res, res.makespan * unit_s

@@ -1,0 +1,55 @@
+"""Event-level simulator validating ParallelSchedule timing and service.
+
+Replays each switch's schedule as (reconfigure δ → serve α at line rate)
+events and checks that (a) every demand entry is fully served by the
+schedule's claimed makespan, and (b) at no instant does any switch serve
+more than one circuit per input/output port (guaranteed by permutations but
+re-checked independently here).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..core.schedule import ParallelSchedule
+
+
+@dataclass
+class SimReport:
+    finish_time: float
+    served: np.ndarray
+    demand_met: bool
+    max_shortfall: float
+
+
+def simulate(sched: ParallelSchedule, D: np.ndarray, tol: float = 1e-9) -> SimReport:
+    D = np.asarray(D, dtype=np.float64)
+    n = D.shape[0]
+    rows = np.arange(n)
+    served = np.zeros_like(D)
+    finish = 0.0
+    for sw in sched.switches:
+        t = 0.0
+        for perm, a in zip(sw.perms, sw.alphas):
+            if a < -tol:
+                raise AssertionError("negative duration in schedule")
+            # Independent port-conflict check: perm must be a permutation.
+            if len(np.unique(perm)) != n:
+                raise AssertionError("configuration is not a permutation")
+            t += sched.delta  # reconfiguration before each configuration
+            served[rows, perm] += a
+            t += a
+        finish = max(finish, t)
+    shortfall = float((D - served).max())
+    if abs(finish - sched.makespan()) > 1e-6 * max(1.0, finish):
+        raise AssertionError(
+            f"simulated finish {finish} != claimed makespan {sched.makespan()}"
+        )
+    return SimReport(
+        finish_time=finish,
+        served=served,
+        demand_met=shortfall <= tol,
+        max_shortfall=max(shortfall, 0.0),
+    )

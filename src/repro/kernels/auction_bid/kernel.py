@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: per-row top-2 reduction of V = W − p (auction bids).
+
+Bandwidth-bound VPU reduction. The benefit matrix is tiled
+(block_rows × block_cols) into VMEM; running (v1, v2, j1) merge state lives
+in VMEM scratch across the column-tile grid dimension, finalized on the last
+column tile. Column tiles are lane-aligned (multiples of 128); row tiles are
+sublane-aligned (multiples of 8).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _bid_kernel(W_ref, p_ref, v1_ref, v2_ref, j1_ref, s1_ref, s2_ref, sj_ref):
+    ci = pl.program_id(1)
+    ncols = pl.num_programs(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s1_ref[...] = jnp.full_like(s1_ref, NEG)
+        s2_ref[...] = jnp.full_like(s2_ref, NEG)
+        sj_ref[...] = jnp.zeros_like(sj_ref)
+
+    tile = W_ref[...] - p_ref[...]  # (br, bc)
+    br, bc = tile.shape
+    col_ids = jax.lax.broadcasted_iota(jnp.int32, (br, bc), 1)
+    t1 = tile.max(axis=1)
+    j_loc = tile.argmax(axis=1).astype(jnp.int32)
+    masked = jnp.where(col_ids == j_loc[:, None], NEG, tile)
+    t2 = masked.max(axis=1)
+    j_glob = j_loc + ci * bc
+
+    v1 = s1_ref[...]
+    v2 = s2_ref[...]
+    j1 = sj_ref[...]
+    take_new = t1 > v1
+    new_v1 = jnp.where(take_new, t1, v1)
+    new_v2 = jnp.where(take_new, jnp.maximum(t2, v1), jnp.maximum(v2, t1))
+    new_j1 = jnp.where(take_new, j_glob, j1)
+    s1_ref[...] = new_v1
+    s2_ref[...] = new_v2
+    sj_ref[...] = new_j1
+
+    @pl.when(ci == ncols - 1)
+    def _finalize():
+        v1_ref[...] = s1_ref[...]
+        v2_ref[...] = s2_ref[...]
+        j1_ref[...] = sj_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_cols", "interpret"))
+def masked_row_top2_pallas(
+    W: jax.Array,
+    prices: jax.Array,
+    *,
+    block_rows: int = 128,
+    block_cols: int = 128,
+    interpret: bool = False,
+):
+    n, m = W.shape
+    block_rows = min(block_rows, n)
+    block_cols = min(block_cols, m)
+    if n % block_rows or m % block_cols:
+        raise ValueError(f"shape {(n, m)} not divisible by blocks "
+                         f"{(block_rows, block_cols)}")
+    grid = (n // block_rows, m // block_cols)
+    out_shapes = (
+        jax.ShapeDtypeStruct((n,), W.dtype),
+        jax.ShapeDtypeStruct((n,), W.dtype),
+        jax.ShapeDtypeStruct((n,), jnp.int32),
+    )
+    return pl.pallas_call(
+        _bid_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, block_cols), lambda r, c: (r, c)),
+            pl.BlockSpec((block_cols,), lambda r, c: (c,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((block_rows,), lambda r, c: (r,)),
+            pl.BlockSpec((block_rows,), lambda r, c: (r,)),
+            pl.BlockSpec((block_rows,), lambda r, c: (r,)),
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((block_rows,), W.dtype),
+            pltpu.VMEM((block_rows,), W.dtype),
+            pltpu.VMEM((block_rows,), jnp.int32),
+        ],
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(W, prices)

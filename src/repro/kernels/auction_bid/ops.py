@@ -1,0 +1,42 @@
+"""Jit'd wrapper for the auction bid kernel (pads to hardware-aligned tiles)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import NEG, masked_row_top2_pallas
+
+_ON_TPU = None
+
+
+def _on_tpu() -> bool:
+    global _ON_TPU
+    if _ON_TPU is None:
+        _ON_TPU = jax.default_backend() == "tpu"
+    return _ON_TPU
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def masked_row_top2(W: jax.Array, prices: jax.Array, *, interpret: bool | None = None):
+    """Per-row (v1, v2, j1) of V = W − p. Pads rows to 8, cols to 128."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    n, m = W.shape
+    rpad = (-n) % 8
+    cpad = (-m) % 128
+    Wp = jnp.pad(W, ((0, rpad), (0, cpad)), constant_values=NEG)
+    pp = jnp.pad(prices, (0, cpad), constant_values=0.0)
+    br = min(128, n + rpad)
+    bc = min(512, m + cpad)
+    # block sizes must divide padded dims: fall back to full extent otherwise
+    if (n + rpad) % br:
+        br = n + rpad
+    if (m + cpad) % bc:
+        bc = m + cpad
+    v1, v2, j1 = masked_row_top2_pallas(
+        Wp, pp, block_rows=br, block_cols=bc, interpret=bool(interpret)
+    )
+    return v1[:n], v2[:n], j1[:n]

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the auction bid top-2 reduction."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def masked_row_top2_ref(W, prices):
+    """Per-row top-2 of V = W − prices.
+
+    Returns (v1, v2, j1): best value, second-best value (over the remaining
+    columns), and the argmax column per row. For n == 1, v2 = NEG.
+    """
+    V = W - prices[None, :]
+    j1 = jnp.argmax(V, axis=1)
+    v1 = jnp.take_along_axis(V, j1[:, None], axis=1)[:, 0]
+    V2 = jnp.where(
+        jnp.arange(V.shape[1])[None, :] == j1[:, None], NEG, V
+    )
+    v2 = V2.max(axis=1)
+    return v1, v2, j1.astype(jnp.int32)

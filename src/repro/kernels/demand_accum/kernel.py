@@ -1,0 +1,79 @@
+"""Pallas TPU kernel: demand-matrix accumulation as one-hot MXU matmuls.
+
+GPU-style scatter-add of (src, dst, bytes) traffic events is atomics-hostile
+on TPU. The TPU-native recast (DESIGN.md §4):
+
+    D += onehot(src)ᵀ @ (onehot(dst) ⊙ w)
+
+per token block — a (n × bt) @ (bt × n) systolic matmul with an f32 VMEM
+accumulator that lives across the token-block grid dimension. ``n`` is the
+rack count (≤ a few hundred), so the (n, n) accumulator sits comfortably in
+VMEM; block sizes are MXU-aligned (multiples of 128 on the lane dim).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _accum_kernel(src_ref, dst_ref, w_ref, out_ref, acc_ref):
+    ti = pl.program_id(0)
+    nt = pl.num_programs(0)
+
+    @pl.when(ti == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    src = src_ref[...]  # (bt,) int32
+    dst = dst_ref[...]
+    w = w_ref[...].astype(jnp.float32)
+    n = acc_ref.shape[0]
+    bt = src.shape[0]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (bt, n), 1)
+    onehot_src = (rows == src[:, None]).astype(jnp.float32)  # (bt, n)
+    onehot_dst_w = jnp.where(rows == dst[:, None], w[:, None], 0.0)  # (bt, n)
+    acc_ref[...] += jax.lax.dot_general(
+        onehot_src,
+        onehot_dst_w,
+        (((0,), (0,)), ((), ())),  # contract over the token dim → (n, n)
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(ti == nt - 1)
+    def _done():
+        out_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("n", "block_tokens", "interpret"))
+def demand_accum_pallas(
+    src: jax.Array,
+    dst: jax.Array,
+    w: jax.Array,
+    *,
+    n: int,
+    block_tokens: int = 512,
+    interpret: bool = False,
+):
+    (T,) = src.shape
+    block_tokens = min(block_tokens, T)
+    if T % block_tokens:
+        raise ValueError(f"T={T} not divisible by block_tokens={block_tokens}")
+    grid = (T // block_tokens,)
+    return pl.pallas_call(
+        _accum_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_tokens,), lambda t: (t,)),
+            pl.BlockSpec((block_tokens,), lambda t: (t,)),
+            pl.BlockSpec((block_tokens,), lambda t: (t,)),
+        ],
+        out_specs=pl.BlockSpec((n, n), lambda t: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((n, n), jnp.float32)],
+        interpret=interpret,
+    )(src, dst, w)

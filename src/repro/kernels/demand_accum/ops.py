@@ -1,0 +1,29 @@
+"""Jit'd wrapper: pads the event stream and dispatches to the kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import demand_accum_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("n", "interpret"))
+def demand_accum(src, dst, w, *, n: int, interpret: bool | None = None):
+    """Accumulate (src, dst, w) events into an (n, n) demand matrix.
+
+    Padding events get w = 0 so they contribute nothing.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    T = src.shape[0]
+    bt = 512 if T >= 512 else max(8, T)
+    pad = (-T) % bt
+    src = jnp.pad(src.astype(jnp.int32), (0, pad))
+    dst = jnp.pad(dst.astype(jnp.int32), (0, pad))
+    w = jnp.pad(w.astype(jnp.float32), (0, pad))
+    return demand_accum_pallas(
+        src, dst, w, n=n, block_tokens=bt, interpret=bool(interpret)
+    )

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for demand-matrix accumulation from traffic events."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def demand_accum_ref(src, dst, w, n: int):
+    """D[n, n] with D[src[t], dst[t]] += w[t] (scatter-add)."""
+    D = jnp.zeros((n, n), jnp.float32)
+    return D.at[src, dst].add(w.astype(jnp.float32))

@@ -1,0 +1,136 @@
+"""Pallas TPU flash attention: GQA, causal and/or sliding-window masks.
+
+Online-softmax accumulation over key/value tiles. Grid layout
+``(batch·q_heads, q_blocks, kv_blocks)`` with the KV dimension innermost;
+running (m, l, acc) state lives in VMEM scratch across KV tiles and is
+normalized on the last tile. GQA is expressed purely through the K/V
+BlockSpec index maps (query head h reads KV head ``h // group``), so no
+repeated-KV materialization ever happens. Block shapes are MXU-aligned
+(q/kv tiles are multiples of 128 on the sequence dims, head dim padded to
+a multiple of 128 by the ops wrapper).
+
+Fully-masked KV tiles (beyond the causal frontier or outside the sliding
+window) are computed-but-masked; on real hardware they would be pruned with
+a custom grid index map — noted in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, scale: float, causal: bool, window: int | None, sk_total: int, sq_total: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]  # (bq, d)
+    k = k_ref[0]  # (bk, d)
+    v = v_ref[0]  # (bk, d)
+    bq, _ = q.shape
+    bk, _ = k.shape
+
+    s = jax.lax.dot_general(
+        q.astype(jnp.float32), k.astype(jnp.float32),
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale  # (bq, bk)
+
+    # Mask: absolute positions, queries aligned to the end of the KV stream.
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + (
+        sk_total - sq_total
+    )
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    keep = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        keep &= k_pos <= q_pos
+    if window is not None:
+        keep &= k_pos > q_pos - window
+    s = jnp.where(keep, s, NEG)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    # Guard fully-masked rows (m_new == NEG): exp(NEG - NEG) would be 1.
+    safe_m = jnp.where(m_new <= NEG / 2, 0.0, m_new)
+    p = jnp.exp(jnp.where(keep, s - safe_m[:, None], NEG))
+    corr = jnp.exp(jnp.where(m_prev <= NEG / 2, NEG, m_prev - safe_m))
+    l_ref[...] = l_prev * corr + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v.astype(jnp.float32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _done():
+        l = l_ref[...]
+        safe_l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / safe_l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "block_q", "block_kv", "group", "interpret", "scale",
+    ),
+)
+def flash_attention_pallas(
+    q: jax.Array,  # (BH, Sq, D)  — batch·q_heads folded
+    k: jax.Array,  # (BHkv, Sk, D)
+    v: jax.Array,
+    *,
+    group: int,  # q heads per kv head
+    scale: float,
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = False,
+):
+    BH, Sq, D = q.shape
+    BHkv, Sk, _ = k.shape
+    assert BH == BHkv * group
+    block_q = min(block_q, Sq)
+    block_kv = min(block_kv, Sk)
+    if Sq % block_q or Sk % block_kv:
+        raise ValueError("sequence lengths must divide block sizes")
+    grid = (BH, Sq // block_q, Sk // block_kv)
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale, causal=causal, window=window, sk_total=Sk, sq_total=Sq,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda h, qi, ki: (h, qi, 0)),
+            pl.BlockSpec((1, block_kv, D), lambda h, qi, ki, g=group: (h // g, ki, 0)),
+            pl.BlockSpec((1, block_kv, D), lambda h, qi, ki, g=group: (h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda h, qi, ki: (h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

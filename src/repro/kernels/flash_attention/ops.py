@@ -1,0 +1,89 @@
+"""Public attention op: Pallas forward + reference-recompute backward.
+
+``mha(q, k, v)`` accepts (B, Hq, S, D) / (B, Hkv, S, D). The forward pass
+uses the Pallas flash kernel (interpret mode off-TPU); the backward pass
+recomputes through the pure-jnp oracle under ``jax.vjp`` (standard
+flash-recompute pattern — no attention matrix is ever materialized in the
+forward). ``impl="reference"`` selects the oracle end to end (used for the
+training path of small smoke models and as the numerically exact fallback).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_pallas
+from .ref import mha_chunked, mha_ref
+
+
+def _pallas_fwd(q, k, v, causal, window, scale, interpret):
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    group = Hq // Hkv
+    # Fold batch/head; pad head dim to a lane-aligned multiple of 128.
+    dpad = (-D) % 128
+    qf = jnp.pad(q.reshape(B * Hq, Sq, D), ((0, 0), (0, 0), (0, dpad)))
+    kf = jnp.pad(k.reshape(B * Hkv, Sk, D), ((0, 0), (0, 0), (0, dpad)))
+    vf = jnp.pad(v.reshape(B * Hkv, Sk, D), ((0, 0), (0, 0), (0, dpad)))
+    # Pick the largest aligned block sizes that divide the sequence lengths.
+    bq = next(b for b in (128, 64, 32, 16, 8, 4, 2, 1) if Sq % b == 0)
+    bk = next(b for b in (128, 64, 32, 16, 8, 4, 2, 1) if Sk % b == 0)
+    out = flash_attention_pallas(
+        qf, kf, vf,
+        group=group, scale=scale, causal=causal, window=window,
+        block_q=bq, block_kv=bk, interpret=interpret,
+    )
+    return out[..., :D].reshape(B, Hq, Sq, D)
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6)
+)
+def _mha_hybrid(q, k, v, causal, window, scale, interpret):
+    return _pallas_fwd(q, k, v, causal, window, scale, interpret)
+
+
+def _mha_hybrid_fwd(q, k, v, causal, window, scale, interpret):
+    return _pallas_fwd(q, k, v, causal, window, scale, interpret), (q, k, v)
+
+
+def _mha_hybrid_bwd(causal, window, scale, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: mha_ref(q_, k_, v_, causal=causal, window=window, scale=scale),
+        q, k, v,
+    )
+    return vjp(g)
+
+
+_mha_hybrid.defvjp(_mha_hybrid_fwd, _mha_hybrid_bwd)
+
+
+def mha(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    impl: str = "pallas",
+    interpret: bool | None = None,
+    chunk_unroll: bool = False,
+) -> jax.Array:
+    """Grouped-query attention. q: (B,Hq,Sq,D); k/v: (B,Hkv,Sk,D)."""
+    if scale is None:
+        scale = float(q.shape[-1]) ** -0.5
+    if impl == "reference":
+        return mha_ref(q, k, v, causal=causal, window=window, scale=scale)
+    if impl == "chunked":
+        return mha_chunked(q, k, v, causal=causal, window=window, scale=scale,
+                           unroll=chunk_unroll)
+    if impl != "pallas":
+        raise ValueError(f"unknown impl {impl!r}")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _mha_hybrid(q, k, v, causal, window, scale, bool(interpret))

@@ -1,0 +1,113 @@
+"""Pure-jnp oracle for GQA attention (causal / sliding-window / full)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def _mask(sq: int, sk: int, causal: bool, window: int | None):
+    """(sq, sk) boolean keep-mask; query i attends key j.
+
+    Positions are aligned at the end: query i corresponds to absolute
+    position (sk - sq + i), the standard decode/prefill alignment.
+    """
+    q_pos = jnp.arange(sq)[:, None] + (sk - sq)
+    k_pos = jnp.arange(sk)[None, :]
+    keep = jnp.ones((sq, sk), bool)
+    if causal:
+        keep &= k_pos <= q_pos
+    if window is not None:
+        keep &= k_pos > q_pos - window
+    return keep
+
+
+def mha_chunked(
+    q, k, v, *, causal: bool = True, window: int | None = None, scale=None,
+    block_q: int = 512, unroll: bool = False,
+):
+    """Flash-style pure-jnp attention: lax.scan over query blocks.
+
+    Differentiable, O(S·block_q) score memory, HLO size independent of
+    sequence length — this is the training / dry-run lowering path (the
+    Pallas kernel is the TPU-runtime path). With a sliding ``window``, each
+    query block only reads its (window + block_q)-wide KV slice, keeping the
+    compiled FLOPs faithful to the local-attention cost.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    group = Hq // Hkv
+    scale = (D ** -0.5) if scale is None else scale
+    if unroll:
+        # Cost-calibration: fewer unrolled bodies. Full attention: identical
+        # total FLOPs (each body scores its block against the full Sk).
+        # Windowed: the kv slice grows to (window + bq), overcounting local
+        # layers by ≤ (window+2048)/(window+512) — bounded and noted in
+        # EXPERIMENTS.md §Dry-run method notes.
+        block_q = max(block_q, 2048)
+    bq = min(block_q, Sq)
+    while Sq % bq:
+        bq //= 2
+    nb = Sq // bq
+    offset = Sk - Sq  # queries aligned to the end of the KV stream
+    qg = q.reshape(B, Hkv, group, Sq, D)
+
+    windowed = window is not None and (window + bq) < Sk
+
+    def blk(carry, i):
+        qs = i * bq
+        qb = jax.lax.dynamic_slice_in_dim(qg, qs, bq, axis=3)
+        q_pos = qs + jnp.arange(bq)[:, None] + offset
+        if windowed:
+            # KV slice [qs+offset-window+1, qs+offset+bq] (clipped).
+            ks_lo = jnp.clip(qs + offset - window + 1, 0, Sk - (window + bq))
+            kb = jax.lax.dynamic_slice_in_dim(k, ks_lo, window + bq, axis=2)
+            vb = jax.lax.dynamic_slice_in_dim(v, ks_lo, window + bq, axis=2)
+            k_pos = ks_lo + jnp.arange(window + bq)[None, :]
+        else:
+            kb, vb = k, v
+            k_pos = jnp.arange(Sk)[None, :]
+        s = jnp.einsum(
+            "bhgqd,bhkd->bhgqk",
+            qb.astype(jnp.float32), kb.astype(jnp.float32),
+        ) * scale
+        keep = jnp.ones(s.shape[-2:], bool)
+        if causal:
+            keep &= k_pos <= q_pos
+        if window is not None:
+            keep &= k_pos > q_pos - window
+        s = jnp.where(keep[None, None, None], s, NEG)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vb.astype(jnp.float32))
+        return carry, o.astype(q.dtype)
+
+    if unroll:  # dry-run cost calibration: loop bodies must appear per-trip
+        blocks = jnp.stack([blk((), i)[1] for i in range(nb)])
+    else:
+        _, blocks = jax.lax.scan(blk, (), jnp.arange(nb))
+    # blocks: (nb, B, Hkv, group, bq, D) → (B, Hq, Sq, D)
+    out = jnp.moveaxis(blocks, 0, 3).reshape(B, Hkv, group, Sq, D)
+    return out.reshape(B, Hq, Sq, D)
+
+
+def mha_ref(q, k, v, *, causal: bool = True, window: int | None = None, scale=None):
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D), Hq % Hkv == 0 → (B, Hq, Sq, D)."""
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    assert Hq % Hkv == 0
+    group = Hq // Hkv
+    scale = (D ** -0.5) if scale is None else scale
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kk.astype(jnp.float32))
+    s = s * scale
+    keep = _mask(Sq, Sk, causal, window)
+    s = jnp.where(keep[None, None], s, NEG)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32))
+    return out.astype(q.dtype)

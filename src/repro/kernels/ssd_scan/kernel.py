@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: Mamba-2 SSD chunked scan — intra-chunk pass.
+
+State-space duality: within a chunk of length L the recurrence is a masked
+(decay-weighted) attention-like matmul pair, all MXU work:
+
+    y_intra = ((C @ Bᵀ) ⊙ decay_mask) @ xd        decay[t,u] = exp(la_t − la_u)
+    state_c = (B ⊙ exp(la_L − la))ᵀ @ xd           (N, P) carry-out
+    gate_c  = exp(la_L)                            chunk decay
+
+The cross-chunk recurrence H_in(c+1) = gate_c·H_in(c) + state_c is a tiny
+associative scan done in the ops wrapper; the O(S·L·(N+P)) heavy lifting is
+in this kernel. Grid: (BH, n_chunks); every tile is VMEM-resident. All exps
+are of non-positive numbers (decays ≤ 1) — numerically safe.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_chunk_kernel(xd_ref, la_ref, b_ref, c_ref, y_ref, st_ref, g_ref):
+    xd = xd_ref[0].astype(jnp.float32)  # (L, P)
+    loga = la_ref[0].astype(jnp.float32)  # (L,)
+    B = b_ref[0].astype(jnp.float32)  # (L, N)
+    C = c_ref[0].astype(jnp.float32)  # (L, N)
+    L = xd.shape[0]
+
+    la = jnp.cumsum(loga)  # inclusive cumulative log-decay
+    la_total = la[-1]
+    # Pairwise decay matrix with causal (u ≤ t) mask.
+    diff = la[:, None] - la[None, :]
+    t_ge_u = (
+        jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+        >= jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    )
+    decay = jnp.where(t_ge_u, jnp.exp(jnp.minimum(diff, 0.0)), 0.0)
+    scores = jax.lax.dot_general(
+        C, B, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * decay  # (L, L)
+    y_ref[0] = jax.lax.dot_general(
+        scores, xd, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ).astype(y_ref.dtype)
+    to_end = jnp.exp(la_total - la)  # (L,)
+    st_ref[0] = jax.lax.dot_general(
+        B * to_end[:, None], xd, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(st_ref.dtype)  # (N, P)
+    g_ref[0, 0] = jnp.exp(la_total)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunk_pallas(
+    xd: jax.Array,   # (BH, S, P)
+    loga: jax.Array,  # (BH, S)
+    B: jax.Array,    # (BH, S, N)
+    C: jax.Array,    # (BH, S, N)
+    *,
+    chunk: int = 64,
+    interpret: bool = False,
+):
+    BH, S, P = xd.shape
+    N = B.shape[-1]
+    if S % chunk:
+        raise ValueError(f"S={S} not divisible by chunk={chunk}")
+    nc = S // chunk
+    grid = (BH, nc)
+    return pl.pallas_call(
+        _ssd_chunk_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, P), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk), lambda b, c: (b, c)),
+            pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, chunk, P), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, N, P), lambda b, c: (b * nc + c, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b, c: (b, c)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((BH, S, P), jnp.float32),
+            jax.ShapeDtypeStruct((BH * nc, N, P), jnp.float32),
+            jax.ShapeDtypeStruct((BH, nc), jnp.float32),
+        ),
+        interpret=interpret,
+    )(xd, loga, B, C)

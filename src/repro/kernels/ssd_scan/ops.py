@@ -1,0 +1,186 @@
+"""Public SSD op: Pallas intra-chunk kernel + tiny cross-chunk scan.
+
+Forward: Pallas per-chunk pass → ``lax.associative_scan`` over the (gate,
+state) pairs (the cross-chunk recurrence) → inter-chunk correction
+``y += (C ⊙ exp(la)) @ H_in``. Backward: reference-recompute via custom_vjp
+(same pattern as flash_attention). ``ssd_decode_step`` is the O(1) serving
+update.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_chunk_pallas
+from .ref import ssd_decode_step_ref, ssd_ref
+
+
+def _pick_chunk(S: int) -> int:
+    for c in (128, 64, 32, 16, 8, 4, 2, 1):
+        if S % c == 0:
+            return c
+    return 1
+
+
+def _chunk_jnp(xd, loga, B, C, chunk):
+    """Vectorized pure-jnp version of the Pallas chunk kernel (same math).
+
+    Used for training and dry-run lowering: compact HLO at any (BH, S),
+    whereas the interpret-mode Pallas path would unroll the grid on CPU.
+    """
+    BH, S, P = xd.shape
+    N = B.shape[-1]
+    nc = S // chunk
+    xd_c = xd.reshape(BH, nc, chunk, P).astype(jnp.float32)
+    la = jnp.cumsum(loga.reshape(BH, nc, chunk).astype(jnp.float32), axis=-1)
+    B_c = B.reshape(BH, nc, chunk, N).astype(jnp.float32)
+    C_c = C.reshape(BH, nc, chunk, N).astype(jnp.float32)
+    la_tot = la[..., -1]
+    diff = la[..., :, None] - la[..., None, :]
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(tri, jnp.exp(jnp.minimum(diff, 0.0)), 0.0)
+    scores = jnp.einsum("bcln,bcmn->bclm", C_c, B_c) * decay
+    y_intra = jnp.einsum("bclm,bcmp->bclp", scores, xd_c).reshape(BH, S, P)
+    to_end = jnp.exp(la_tot[..., None] - la)
+    states = jnp.einsum("bcln,bclp->bcnp", B_c * to_end[..., None], xd_c)
+    gates = jnp.exp(la_tot)
+    return y_intra, states, gates
+
+
+def _chunk_jnp_scanned(xd, loga, B, C, chunk, unroll=False):
+    """Memory-lean variant: lax.scan over the chunk axis.
+
+    The vectorized ``_chunk_jnp`` materializes all nc (L×L) decay/score
+    tiles at once — O(S·L) f32 per (batch·head), which at mamba2-2.7b
+    train_4k is ~170 GB/chip (the dry-run's memory-dominant term). Scanning
+    over chunks keeps one tile live at a time — the jnp analogue of the
+    Pallas kernel's VMEM blocking. ``unroll=True`` python-loops the chunks
+    for dry-run cost calibration.
+    """
+    BH, S, P = xd.shape
+    N = B.shape[-1]
+    nc = S // chunk
+    xs = (
+        jnp.moveaxis(xd.reshape(BH, nc, chunk, P), 1, 0),
+        jnp.moveaxis(loga.reshape(BH, nc, chunk), 1, 0),
+        jnp.moveaxis(B.reshape(BH, nc, chunk, N), 1, 0),
+        jnp.moveaxis(C.reshape(BH, nc, chunk, N), 1, 0),
+    )
+
+    def body(carry, inp):
+        xd_c, la_c, B_c, C_c = inp
+        y_c, st_c, g_c = _chunk_jnp(xd_c, la_c, B_c, C_c, chunk)
+        return carry, (y_c, st_c[:, 0], g_c[:, 0])
+
+    if unroll:
+        outs = [body((), jax.tree.map(lambda a: a[i], xs))[1]
+                for i in range(nc)]
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *outs)
+    else:
+        _, ys = jax.lax.scan(body, (), xs)
+    y_intra = jnp.moveaxis(ys[0], 0, 1).reshape(BH, S, P)
+    states = jnp.moveaxis(ys[1], 0, 1)  # (BH, nc, N, P)
+    gates = jnp.moveaxis(ys[2], 0, 1)  # (BH, nc)
+    return y_intra, states, gates
+
+
+def _ssd_fwd_impl(xd, loga, B, C, h0, interpret, use_pallas=True,
+                  scanned=False, unroll=False):
+    BH, S, P = xd.shape
+    N = B.shape[-1]
+    chunk = _pick_chunk(S)
+    nc = S // chunk
+    if use_pallas:
+        y_intra, states, gates = ssd_chunk_pallas(
+            xd, loga, B, C, chunk=chunk, interpret=interpret
+        )
+        states = states.reshape(BH, nc, N, P)
+    elif scanned:
+        y_intra, states, gates = _chunk_jnp_scanned(
+            xd, loga, B, C, chunk, unroll=unroll
+        )
+    else:
+        y_intra, states, gates = _chunk_jnp(xd, loga, B, C, chunk)
+    # Cross-chunk recurrence: H_out(c) = gate_c · H_in(c) + state_c.
+    pair_g = jnp.concatenate([jnp.ones((BH, 1)), gates[:, :-1]], axis=1)
+    pair_s = jnp.concatenate(
+        [h0[:, None].astype(jnp.float32), states[:, :-1]], axis=1
+    )
+
+    def combine(a, b):
+        g1, s1 = a
+        g2, s2 = b
+        return g1 * g2, s1 * g2[..., None, None] + s2
+
+    g_in, h_in = jax.lax.associative_scan(combine, (pair_g, pair_s), axis=1)
+    # h_in[c] = state entering chunk c (includes h0 propagated).
+    la = jnp.cumsum(loga.reshape(BH, nc, chunk), axis=-1)
+    Cc = C.reshape(BH, nc, chunk, N)
+    y_inter = jnp.einsum(
+        "bcln,bcnp->bclp", Cc * jnp.exp(la)[..., None], h_in
+    ).reshape(BH, S, P)
+    y = y_intra + y_inter
+    hT = h_in[:, -1] * gates[:, -1][..., None, None] + states[:, -1]
+    return y.astype(xd.dtype), hT
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def _ssd_hybrid(xd, loga, B, C, h0, interpret):
+    return _ssd_fwd_impl(xd, loga, B, C, h0, interpret)
+
+
+def _ssd_hybrid_fwd(xd, loga, B, C, h0, interpret):
+    return _ssd_fwd_impl(xd, loga, B, C, h0, interpret), (xd, loga, B, C, h0)
+
+
+def ssd_chunked(xd, loga, B, C, h0, scanned=False, unroll=False):
+    """Differentiable pure-jnp chunked SSD (training / dry-run path)."""
+    return _ssd_fwd_impl(xd, loga, B, C, h0, False, use_pallas=False,
+                         scanned=scanned, unroll=unroll)
+
+
+def _ssd_hybrid_bwd(interpret, res, g):
+    xd, loga, B, C, h0 = res
+    _, vjp = jax.vjp(lambda *a: ssd_ref(*a), xd, loga, B, C, h0)
+    return vjp(g)
+
+
+_ssd_hybrid.defvjp(_ssd_hybrid_fwd, _ssd_hybrid_bwd)
+
+
+def ssd_scan(
+    xd: jax.Array,
+    loga: jax.Array,
+    B: jax.Array,
+    C: jax.Array,
+    h0: jax.Array | None = None,
+    *,
+    impl: str = "pallas",
+    interpret: bool | None = None,
+    chunk_unroll: bool = False,
+):
+    """SSD sequence transform. Returns (y (BH,S,P), final state (BH,N,P))."""
+    BH, S, P = xd.shape
+    N = B.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((BH, N, P), jnp.float32)
+    if impl == "reference":
+        return ssd_ref(xd, loga, B, C, h0)
+    if impl == "chunked":
+        return ssd_chunked(xd, loga, B, C, h0, unroll=chunk_unroll)
+    if impl == "chunked_scan":
+        return ssd_chunked(xd, loga, B, C, h0, scanned=True,
+                           unroll=chunk_unroll)
+    if impl != "pallas":
+        raise ValueError(f"unknown impl {impl!r}")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _ssd_hybrid(xd, loga, B, C, h0, bool(interpret))
+
+
+def ssd_decode_step(h, xd, loga, B, C):
+    """One-token state update (BH,N,P),(BH,P),(BH,),(BH,N),(BH,N)."""
+    return ssd_decode_step_ref(h, xd, loga, B, C)

@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the Mamba-2 SSD recurrence (exact sequential scan).
+
+Per (batch·head): H_t = a_t · H_{t-1} + B_tᵀ ⊗ xd_t,  y_t = C_t @ H_t
+with decay a_t = exp(loga_t) ∈ (0, 1], state H ∈ (N, P).
+Shapes: xd (BH, S, P), loga (BH, S), B/C (BH, S, N) → y (BH, S, P).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(xd, loga, B, C, h0=None):
+    BH, S, P = xd.shape
+    N = B.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((BH, N, P), jnp.float32)
+
+    def step(h, inp):
+        xd_t, loga_t, b_t, c_t = inp
+        h = jnp.exp(loga_t)[:, None, None] * h + jnp.einsum(
+            "bn,bp->bnp", b_t.astype(jnp.float32), xd_t.astype(jnp.float32)
+        )
+        y = jnp.einsum("bn,bnp->bp", c_t.astype(jnp.float32), h)
+        return h, y
+
+    xs = (
+        jnp.moveaxis(xd, 1, 0),
+        jnp.moveaxis(loga, 1, 0),
+        jnp.moveaxis(B, 1, 0),
+        jnp.moveaxis(C, 1, 0),
+    )
+    hT, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1).astype(xd.dtype), hT
+
+
+def ssd_decode_step_ref(h, xd, loga, B, C):
+    """Single-token recurrence update (serving path)."""
+    h = jnp.exp(loga)[:, None, None] * h + jnp.einsum(
+        "bn,bp->bnp", B.astype(jnp.float32), xd.astype(jnp.float32)
+    )
+    y = jnp.einsum("bn,bnp->bp", C.astype(jnp.float32), h)
+    return h, y.astype(xd.dtype)

@@ -1,0 +1,278 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the very first lines: jax locks the device count on first init.
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each live cell (40 minus the noted long_500k skips — see DESIGN.md §6):
+  * build the production mesh (16×16 single-pod / 2×16×16 multi-pod),
+  * jit the train_step (train/prefill) or serve_step (decode) with full
+    param/optimizer/cache shardings,
+  * ``.lower().compile()`` — any sharding mismatch, compile-OOM or
+    unsupported collective fails the cell,
+  * record memory_analysis / cost_analysis / collective schedule / roofline
+    terms to benchmarks/out/dryrun/<cell>.json.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+  ... dryrun --arch qwen3-moe-30b-a3b --shape train_4k         # one cell
+  ... dryrun --multi-pod / --single-pod                        # mesh select
+  ... dryrun --force                                           # recompute
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "out" / "dryrun"
+
+
+def with_depth(cfg, n_units: int):
+    """Same-structure config with n_units scan repeats (remainders kept)."""
+    import dataclasses
+
+    if cfg.pattern_local:
+        period = cfg.pattern_local + cfg.pattern_global
+        rem = cfg.num_layers % period
+        return dataclasses.replace(cfg, num_layers=n_units * period + rem)
+    if cfg.attn_every:
+        rem = cfg.num_layers % cfg.attn_every
+        return dataclasses.replace(cfg, num_layers=n_units * cfg.attn_every + rem)
+    if cfg.family == "audio":
+        return dataclasses.replace(
+            cfg, num_layers=n_units, encoder_layers=n_units
+        )
+    return dataclasses.replace(cfg, num_layers=n_units)
+
+
+def scan_units(cfg) -> int:
+    """Trip count of the layer scan(s) in the full config."""
+    if cfg.pattern_local:
+        return cfg.num_layers // (cfg.pattern_local + cfg.pattern_global)
+    if cfg.attn_every:
+        return cfg.num_layers // cfg.attn_every
+    return cfg.num_layers
+
+
+def _cell_metrics(compiled) -> dict:
+    """Per-chip flops / bytes / collective wire bytes of one executable."""
+    from ..analysis.hlo import parse_collectives
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    byte_keys = [k for k in cost if k.startswith("bytes accessed")]
+    hlo_bytes = max(float(cost[k]) for k in byte_keys) if byte_keys else 0.0
+    stats = parse_collectives(compiled.as_text())
+    return {
+        "flops": flops,
+        "bytes": hlo_bytes,
+        "wire": stats.total_wire_bytes,
+        "collectives": stats.as_dict(),
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
+             remat: bool = True, sp: bool = True, donate: bool = True,
+             calibrate: bool = True, shard_mode: str = "tp_fsdp",
+             ssd_impl: str = "chunked", cfg_patch: dict | None = None) -> dict:
+    import dataclasses
+
+    import jax
+
+    from ..analysis.roofline import TPU_V5E, Roofline, model_flops
+    from ..configs.registry import get_arch, get_shape
+    from ..models.registry import build_model
+    from ..parallel.steps import lower_cell
+    from .mesh import make_production_mesh
+
+    cfg = get_arch(arch)
+    if cfg_patch:
+        if "moe" in cfg_patch and cfg.moe is not None:
+            cfg = dataclasses.replace(
+                cfg, moe=dataclasses.replace(cfg.moe, **cfg_patch.pop("moe"))
+            )
+        if cfg_patch:
+            cfg = dataclasses.replace(cfg, **cfg_patch)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    t0 = time.time()
+    lowered, meta = lower_cell(cfg, shape, mesh, remat=remat, sp=sp,
+                               donate=donate, shard_mode=shard_mode,
+                               ssd_impl=ssd_impl)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            v = getattr(ma, k, None)
+            if v is not None:
+                mem[k] = int(v)
+    except Exception as e:  # pragma: no cover - backend-dependent
+        mem["error"] = str(e)
+
+    metrics = _cell_metrics(compiled)
+    calib = {"applied": False}
+    if calibrate:
+        # XLA's HloCostAnalysis counts while(scan) bodies ONCE — calibrate
+        # per-layer costs from unrolled depth-1/-2 variants, extrapolate.
+        units = scan_units(cfg)
+        m = {}
+        for n_units in (1, 2):
+            c_small = with_depth(cfg, n_units)
+            low_s, _ = lower_cell(c_small, shape, mesh, remat=remat, sp=sp,
+                                  donate=donate, unroll=True,
+                                  shard_mode=shard_mode, ssd_impl=ssd_impl)
+            m[n_units] = _cell_metrics(low_s.compile())
+        per_unit = {k: m[2][k] - m[1][k] for k in ("flops", "bytes", "wire")}
+        metrics = {
+            k: m[1][k] + max(per_unit[k], 0.0) * (units - 1)
+            for k in ("flops", "bytes", "wire")
+        }
+        metrics["collectives"] = m[2]["collectives"]
+        calib = {
+            "applied": True,
+            "units": units,
+            "per_unit": per_unit,
+            "base": {k: m[1][k] for k in ("flops", "bytes", "wire")},
+        }
+
+    params_shape = jax.eval_shape(lambda: build_model(cfg).init(jax.random.PRNGKey(0)))
+    hw = TPU_V5E
+    compute_s = metrics["flops"] / hw["peak_flops_bf16"]
+    memory_s = metrics["bytes"] / hw["hbm_bw"]
+    collective_s = metrics["wire"] / hw["ici_bw"]
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    mf = model_flops(cfg, shape, params_shape)
+    ideal_s = (mf / n_chips) / hw["peak_flops_bf16"]
+    bound = max(terms.values())
+    roof = Roofline(
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        dominant=max(terms, key=terms.get),
+        model_flops=mf,
+        hlo_flops_per_chip=metrics["flops"],
+        hlo_bytes_per_chip=metrics["bytes"],
+        wire_bytes_per_chip=metrics["wire"],
+        useful_ratio=(mf / n_chips / metrics["flops"]) if metrics["flops"] else 0.0,
+        roofline_fraction=(ideal_s / bound) if bound > 0 else 0.0,
+        collectives=metrics["collectives"],
+    )
+
+    # Per-device residency: params+opt live in donated arguments.
+    bytes_per_device = (
+        mem.get("argument_size_in_bytes", 0) / n_chips
+        + mem.get("temp_size_in_bytes", 0) / n_chips
+    )
+    return {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
+        "kind": meta["kind"],
+        "n_params": meta["n_params"],
+        "lower_s": round(t1 - t0, 2),
+        "compile_s": round(t2 - t1, 2),
+        "memory_analysis": mem,
+        "bytes_per_device_est": bytes_per_device,
+        "roofline": roof.as_dict(),
+        "calibration": calib,
+        "options": {"remat": remat, "sp": sp, "donate": donate,
+                    "shard_mode": shard_mode},
+    }
+
+
+def cell_path(arch: str, shape: str, multi_pod: bool) -> Path:
+    mesh = "pod2" if multi_pod else "pod1"
+    return OUT_DIR / f"{arch}__{shape}__{mesh}.json"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--no-sp", action="store_true")
+    args = ap.parse_args()
+
+    from ..configs.registry import all_cells
+
+    meshes = []
+    if args.multi_pod or not args.single_pod:
+        meshes.append(True)
+    if args.single_pod or not args.multi_pod:
+        meshes.insert(0, False)
+
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    failures = []
+    # Cheapest-first ordering: maximizes coverage per wall-clock on 1 core.
+    arch_order = [
+        "whisper-tiny", "qwen2-vl-2b", "minicpm-2b", "zamba2-1.2b",
+        "mamba2-2.7b", "granite-3-8b", "deepseek-moe-16b",
+        "qwen3-moe-30b-a3b", "gemma3-27b", "command-r-35b",
+    ]
+    shape_order = ["decode_32k", "train_4k", "long_500k", "prefill_32k"]
+    cells = sorted(
+        all_cells(),
+        key=lambda c: (shape_order.index(c[1]), arch_order.index(c[0])),
+    )
+    for arch, shape, skipped in cells:
+        if args.arch and arch != args.arch:
+            continue
+        if args.shape and shape != args.shape:
+            continue
+        if skipped:
+            print(f"SKIP {arch} × {shape} (full-attention arch at 500k — "
+                  f"DESIGN.md §6)")
+            continue
+        for mp in meshes:
+            path = cell_path(arch, shape, mp)
+            if path.exists() and not args.force:
+                print(f"CACHED {path.name}")
+                continue
+            label = f"{arch} × {shape} × {'2x16x16' if mp else '16x16'}"
+            print(f"RUN {label} ...", flush=True)
+            try:
+                # Roofline calibration (extra depth-1/-2 compiles) only for
+                # the single-pod mesh — the §Roofline table is single-pod;
+                # the multi-pod pass proves the "pod" axis shards.
+                art = run_cell(arch, shape, mp, remat=not args.no_remat,
+                               sp=not args.no_sp, calibrate=not mp)
+                path.write_text(json.dumps(art, indent=1))
+                r = art["roofline"]
+                print(
+                    f"  OK lower={art['lower_s']}s compile={art['compile_s']}s "
+                    f"dominant={r['dominant']} "
+                    f"terms=({r['compute_s']:.3e},{r['memory_s']:.3e},"
+                    f"{r['collective_s']:.3e})s frac={r['roofline_fraction']:.2f}",
+                    flush=True,
+                )
+            except Exception as e:
+                failures.append((label, repr(e)))
+                print(f"  FAIL {label}: {e}", flush=True)
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for label, err in failures:
+            print(f"  {label}: {err[:200]}")
+        return 1
+    print("\nAll requested dry-run cells passed.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,21 @@
+"""Production mesh factory (required by the multi-pod dry-run spec).
+
+A function — never a module-level constant — so importing this module never
+touches jax device state.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(devices: int | None = None, model: int = 2):
+    """Small mesh for CPU multi-device tests (data × model)."""
+    n = devices or len(jax.devices())
+    return jax.make_mesh((n // model, model), ("data", "model"))

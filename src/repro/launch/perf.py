@@ -1,0 +1,96 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ first lines, same contract as dryrun.py.
+"""Perf hillclimbing driver (§Perf): run named lowering variants of a cell,
+record the three roofline terms per variant, append to
+benchmarks/out/perf_log.json.
+
+    PYTHONPATH=src python -m repro.launch.perf --arch gemma3-27b \
+        --shape train_4k --variant no_sp --variant tp_only ...
+
+Variants are combinations of the framework's optimization knobs:
+    base        remat + SP activation constraint + TP/FSDP sharding
+    no_sp       drop the sequence-parallel activation constraint
+    no_remat    store activations instead of recomputing in backward
+    tp_only     replicate params over data (no FSDP gathers)
+    no_sp_tp_only, no_remat_no_sp, ...   combinations
+"""
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+OUT = Path(__file__).resolve().parents[3] / "benchmarks" / "out"
+
+VARIANTS = {
+    "base": {},
+    "no_sp": {"sp": False},
+    "no_remat": {"remat": False},
+    "tp_only": {"shard_mode": "tp_only"},
+    "no_sp_tp_only": {"sp": False, "shard_mode": "tp_only"},
+    "no_remat_no_sp": {"remat": False, "sp": False},
+    "no_remat_tp_only": {"remat": False, "shard_mode": "tp_only"},
+    # SSD: scan over chunks instead of materializing all (L×L) tiles.
+    "ssd_scanned": {"ssd_impl": "chunked_scan"},
+    "ssd_scanned_no_sp": {"ssd_impl": "chunked_scan", "sp": False},
+    "ssd_scanned_no_remat": {"ssd_impl": "chunked_scan", "remat": False},
+    # MoE: capacity factor 1.0 (20% less expert compute, more drops).
+    "cf1": {"cfg_patch": {"moe": {"capacity_factor": 1.0}}},
+    "cf1_no_sp": {"cfg_patch": {"moe": {"capacity_factor": 1.0}},
+                  "sp": False},
+    # ZeRO-1: params replicated over data, optimizer moments sharded.
+    "zero1": {"shard_mode": "zero1"},
+    "zero1_cf1": {"shard_mode": "zero1",
+                  "cfg_patch": {"moe": {"capacity_factor": 1.0}}},
+    "zero1_no_remat": {"shard_mode": "zero1", "remat": False},
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", action="append", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    from .dryrun import run_cell
+
+    names = args.variant or list(VARIANTS)
+    log_path = OUT / "perf_log.json"
+    log = json.loads(log_path.read_text()) if log_path.exists() else []
+    for name in names:
+        kw = VARIANTS[name]
+        label = f"{args.arch}×{args.shape}×{name}"
+        print(f"VARIANT {label} ...", flush=True)
+        t0 = time.time()
+        try:
+            art = run_cell(args.arch, args.shape, args.multi_pod, **kw)
+        except Exception as e:
+            print(f"  FAIL {e}")
+            log.append({"cell": f"{args.arch}×{args.shape}", "variant": name,
+                        "error": repr(e)[:300]})
+            continue
+        r = art["roofline"]
+        rec = {
+            "cell": f"{args.arch}×{args.shape}",
+            "variant": name,
+            "options": art["options"],
+            "compute_s": r["compute_s"],
+            "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"],
+            "dominant": r["dominant"],
+            "fraction": r["roofline_fraction"],
+            "useful": r["useful_ratio"],
+            "wall_s": round(time.time() - t0, 1),
+        }
+        log.append(rec)
+        print(f"  terms=({r['compute_s']:.3e},{r['memory_s']:.3e},"
+              f"{r['collective_s']:.3e}) dom={r['dominant']} "
+              f"frac={r['roofline_fraction']:.3f}", flush=True)
+        log_path.write_text(json.dumps(log, indent=1))
+
+
+if __name__ == "__main__":
+    main()

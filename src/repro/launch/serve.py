@@ -1,0 +1,50 @@
+"""Serving launcher: batched greedy decode on a reduced config.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch granite-3-8b \
+        --batch 4 --prompt-len 16 --new-tokens 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from ..configs.registry import get_arch
+    from ..models.registry import build_model
+    from ..serve.engine import DecodeEngine
+
+    cfg = get_arch(args.arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    eng = DecodeEngine(
+        model, params, max_len=args.prompt_len + args.new_tokens + 8
+    )
+    rng = np.random.default_rng(args.seed)
+    prompts = rng.integers(
+        0, cfg.vocab_size, (args.batch, args.prompt_len)
+    ).astype(np.int32)
+    t0 = time.perf_counter()
+    res = eng.generate(prompts, args.new_tokens, temperature=args.temperature)
+    dt = time.perf_counter() - t0
+    toks = args.batch * args.new_tokens
+    print(f"arch={cfg.name} batch={args.batch} generated={toks} tokens "
+          f"in {dt:.2f}s → {toks / dt:.1f} tok/s (CPU, reduced config)")
+    print("first row:", res.tokens[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite-3-8b \
+        --reduced --steps 100 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt \
+        --ocs-switches 4 --ocs-delta-us 20
+
+``--reduced`` (default) trains the smoke-scale config on local devices;
+the full configs are exercised via the dry-run (this container is CPU-only).
+With ``--ocs-switches`` the loop runs the SPECTRA fabric controller every
+``--ocs-every`` steps and logs the optical CCT.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--ocs-switches", type=int, default=0)
+    ap.add_argument("--ocs-delta-us", type=float, default=20.0)
+    ap.add_argument("--ocs-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from ..configs.registry import get_arch
+    from ..data.pipeline import make_stream
+    from ..fabric.ocs import OCSFabric
+    from ..models.registry import build_model
+    from ..parallel.steps import make_train_step
+    from ..train.loop import LoopConfig, Trainer
+    from ..train.optimizer import AdamW, warmup_stable_decay
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg, attn_impl="chunked", ssd_impl="chunked")
+    opt = AdamW(schedule=warmup_stable_decay(args.lr, args.steps))
+    stream = make_stream(cfg.vocab_size, args.seq, args.batch, seed=args.seed)
+    step = jax.jit(make_train_step(model, opt))
+    fabric = None
+    if args.ocs_switches:
+        fabric = OCSFabric(
+            num_switches=args.ocs_switches,
+            reconfig_delay_s=args.ocs_delta_us * 1e-6,
+        )
+    loop_cfg = LoopConfig(
+        total_steps=args.steps,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every,
+        ocs_every=args.ocs_every if fabric else 0,
+    )
+    tr = Trainer(model, opt, stream, step, loop_cfg, fabric=fabric)
+    state = tr.run(jax.random.PRNGKey(args.seed))
+    print(json.dumps({
+        "arch": args.arch,
+        "steps": state.step,
+        "restarts": state.restarts,
+        "stragglers": state.stragglers,
+        "history": state.history[-5:],
+        "cct": state.cct_log[-3:],
+    }, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,365 @@
+"""Transformer / MoE / Mamba-2 blocks with train and decode paths.
+
+Every block is a pure function ``(params, x, ...) -> (y, new_cache)``.
+Caches are dicts of arrays (pytrees) so they thread through jit/pjit and
+can be donated in the serving loop.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, MoECfg, SSMCfg
+from ..kernels.flash_attention.ops import mha
+from ..kernels.ssd_scan.ops import ssd_decode_step, ssd_scan
+from .layers import apply_rope, causal_conv1d, dense, rms_norm, silu, winit, zinit
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Attention block.
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg: ModelConfig, d_ff: int | None = None,
+              with_mlp: bool = True) -> Params:
+    D = cfg.d_model
+    dh = cfg.resolved_head_dim
+    Hq, Hkv = cfg.num_heads, cfg.num_kv_heads
+    F = cfg.d_ff if d_ff is None else d_ff
+    ks = jax.random.split(key, 8)
+    p = {
+        "norm1": zinit((D,)),
+        "wq": winit(ks[0], (D, Hq * dh)),
+        "wk": winit(ks[1], (D, Hkv * dh)),
+        "wv": winit(ks[2], (D, Hkv * dh)),
+        "wo": winit(ks[3], (Hq * dh, D)),
+    }
+    if with_mlp:
+        p.update({
+            "norm2": zinit((D,)),
+            "wi_gate": winit(ks[4], (D, F)),
+            "wi_up": winit(ks[5], (D, F)),
+            "wdown": winit(ks[6], (F, D)),
+        })
+    return p
+
+
+def _split_heads(x, n_heads, dh):
+    B, S, _ = x.shape
+    return x.reshape(B, S, n_heads, dh).transpose(0, 2, 1, 3)  # (B,H,S,dh)
+
+
+def _merge_heads(x):
+    B, H, S, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(B, S, H * dh)
+
+
+def _decode_attention(q, k_cache, v_cache, keep, scale):
+    """Masked single-query attention over a static-size cache.
+
+    q: (B, Hq, 1, dh); caches: (B, Hkv, Smax, dh); keep: (Smax,) bool mask of
+    valid cache slots.
+    """
+    B, Hq, _, dh = q.shape
+    Hkv = k_cache.shape[1]
+    group = Hq // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Hkv, group, dh)
+    s = jnp.einsum("bhgd,bhsd->bhgs", qf, k_cache.astype(jnp.float32)) * scale
+    s = jnp.where(keep[None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bhsd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, Hq, 1, dh).astype(q.dtype)
+
+
+def attn_apply(
+    p: Params,
+    x,
+    *,
+    cfg: ModelConfig,
+    positions,
+    causal: bool = True,
+    window: int | None = None,
+    cache: Params | None = None,
+    attn_impl: str = "pallas",
+    kv_override=None,
+    with_mlp: bool = True,
+    chunk_unroll: bool = False,
+):
+    """Self-attention (+ SwiGLU MLP) block with pre-norms and residuals.
+
+    ``cache`` (decode): {"k": (B,Hkv,Smax,dh), "v": ..., "pos": ()}.
+    ``kv_override``: (k_src, v_src) activations for cross-attention.
+    """
+    D = cfg.d_model
+    dh = cfg.resolved_head_dim
+    Hq, Hkv = cfg.num_heads, cfg.num_kv_heads
+    scale = dh ** -0.5
+
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    q = _split_heads(dense(h, p["wq"]), Hq, dh)
+    if kv_override is None:
+        k = _split_heads(dense(h, p["wk"]), Hkv, dh)
+        v = _split_heads(dense(h, p["wv"]), Hkv, dh)
+    else:
+        ksrc, vsrc = kv_override
+        k = _split_heads(dense(ksrc, p["wk"]), Hkv, dh)
+        v = _split_heads(dense(vsrc, p["wv"]), Hkv, dh)
+
+    new_cache = None
+    if cache is None:
+        if kv_override is None:  # self-attention: rotate q and k
+            q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+            k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+        attn = mha(q, k, v, causal=causal, window=window, scale=scale,
+                   impl=attn_impl, chunk_unroll=chunk_unroll)
+    else:
+        pos = cache["pos"]  # () int32 — current absolute position
+        if kv_override is None:
+            pos_b = jnp.broadcast_to(pos[None, None], (x.shape[0], 1))
+            if cfg.mrope_sections:
+                pos_b = jnp.broadcast_to(
+                    pos[None, None, None],
+                    (x.shape[0], 1, len(cfg.mrope_sections)),
+                )
+            q = apply_rope(q, pos_b, cfg.rope_theta, cfg.mrope_sections)
+            k = apply_rope(k, pos_b, cfg.rope_theta, cfg.mrope_sections)
+            smax = cache["k"].shape[2]
+            slots = jnp.arange(smax)
+            if window is not None and smax == window:
+                # Ring buffer: the cache holds only the last `window` keys.
+                write = pos % window
+                k_cache = jax.lax.dynamic_update_slice_in_dim(
+                    cache["k"], k, write, 2
+                )
+                v_cache = jax.lax.dynamic_update_slice_in_dim(
+                    cache["v"], v, write, 2
+                )
+                abs_pos = pos - jnp.mod(pos - slots, window)
+                keep = abs_pos >= 0  # uninitialized slots are negative
+            else:
+                k_cache = jax.lax.dynamic_update_slice_in_dim(
+                    cache["k"], k, pos, 2
+                )
+                v_cache = jax.lax.dynamic_update_slice_in_dim(
+                    cache["v"], v, pos, 2
+                )
+                keep = slots <= pos
+                if window is not None:
+                    keep &= slots > pos - window
+            new_cache = {"k": k_cache, "v": v_cache, "pos": pos + 1}
+        else:
+            # Cross-attention (decode): K/V recomputed from the encoder
+            # output each step (a production server would precompute them
+            # once per request; noted in EXPERIMENTS.md §Perf).
+            k_cache, v_cache = k, v
+            keep = jnp.ones((k.shape[2],), bool)
+            new_cache = cache
+        attn = _decode_attention(q, k_cache, v_cache, keep, scale)
+
+    x = x + dense(_merge_heads(attn), p["wo"])
+    if with_mlp:
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        x = x + dense(
+            silu(dense(h, p["wi_gate"])) * dense(h, p["wi_up"]), p["wdown"]
+        )
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MoE block (capacity-based gather/scatter dispatch — active-FLOPs faithful).
+# ---------------------------------------------------------------------------
+
+def moe_init(key, cfg: ModelConfig) -> Params:
+    m = cfg.moe
+    D, Fe, E = cfg.d_model, m.d_ff_expert, m.num_experts
+    ks = jax.random.split(key, 8)
+    p = {
+        "norm1": zinit((D,)),
+        "router": winit(ks[0], (D, E)),
+        "we_gate": winit(ks[1], (E, D, Fe)),
+        "we_up": winit(ks[2], (E, D, Fe)),
+        "we_down": winit(ks[3], (E, Fe, D)),
+    }
+    if m.num_shared:
+        Fs = Fe * m.num_shared
+        p["ws_gate"] = winit(ks[4], (D, Fs))
+        p["ws_up"] = winit(ks[5], (D, Fs))
+        p["ws_down"] = winit(ks[6], (Fs, D))
+    return p
+
+
+def moe_ffn(p: Params, x, m: MoECfg):
+    """Routed expert FFN on (T, D) tokens → (T, D), plus routing stats."""
+    T, D = x.shape
+    E, K = m.num_experts, m.top_k
+    logits = dense(x, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)  # (T, K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    C = int(math.ceil(T * K * m.capacity_factor / E))
+    C = max(4, -(-C // 4) * 4)  # round up to a multiple of 4
+    # Position of each (token, choice) within its expert queue.
+    e_flat = gate_idx.reshape(-1)  # (T*K,) token-major, choice-minor
+    onehot = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - onehot  # exclusive prefix count
+    pos = (pos * onehot).sum(-1)  # (T*K,)
+    keep = pos < C
+    slot = jnp.where(keep, e_flat * C + pos, E * C)  # overflow → sentinel
+    tok_ids = jnp.repeat(jnp.arange(T), K)
+    # slot → token index / gate weight maps (sentinel row dropped).
+    token_map = jnp.zeros((E * C + 1,), jnp.int32).at[slot].set(tok_ids)
+    gate_map = jnp.zeros((E * C + 1,), jnp.float32).at[slot].set(
+        gate_vals.reshape(-1)
+    )
+    valid = jnp.zeros((E * C + 1,), jnp.float32).at[slot].set(1.0)
+    token_map, gate_map, valid = (
+        token_map[:-1], gate_map[:-1], valid[:-1])
+
+    xe = x[token_map] * valid[:, None].astype(x.dtype)  # (E*C, D)
+    xe = xe.reshape(E, C, D)
+    he = jnp.einsum("ecd,edf->ecf", xe, p["we_gate"].astype(x.dtype))
+    ue = jnp.einsum("ecd,edf->ecf", xe, p["we_up"].astype(x.dtype))
+    ye = jnp.einsum("ecf,efd->ecd", silu(he) * ue, p["we_down"].astype(x.dtype))
+    ye = ye.reshape(E * C, D) * (gate_map * valid)[:, None].astype(x.dtype)
+    y = jnp.zeros_like(x).at[token_map].add(ye)
+
+    # Stats: per-expert token load (drives the MoE demand matrix) + aux loss.
+    load = jnp.bincount(e_flat, length=E).astype(jnp.float32)
+    importance = probs.sum(0)
+    aux = E * jnp.mean(
+        (load / jnp.maximum(load.sum(), 1.0))
+        * (importance / jnp.maximum(importance.sum(), 1.0))
+    )
+    return y, {"expert_load": load, "aux_loss": aux * m.router_aux_coef}
+
+
+def moe_apply(p: Params, x, *, cfg: ModelConfig):
+    """Pre-norm MoE FFN (+ optional shared experts) with residual.
+
+    Dispatch granularity: tokens are grouped **per batch row** whenever a
+    row holds enough tokens (S ≥ 4·E). Group-local gather/scatter keeps the
+    batch dim shardable over the data axis and the expert dim over the
+    model axis — global dispatch would force the compiler to replicate the
+    expert GEMMs (observed 700× FLOPs blow-up in the dry-run). Decode
+    (S = 1) and tiny rows fall back to one global group.
+    """
+    B, S, D = x.shape
+    m = cfg.moe
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    if S >= 4 * m.num_experts:
+        groups = h.reshape(B, S, D)
+        y, stats = jax.vmap(lambda xg: moe_ffn(p, xg, m))(groups)
+        stats = {
+            "expert_load": stats["expert_load"].sum(0),
+            "aux_loss": stats["aux_loss"].mean(),
+        }
+        y = y.reshape(B, S, D)
+    else:
+        flat = h.reshape(B * S, D)
+        y, stats = moe_ffn(p, flat, m)
+        y = y.reshape(B, S, D)
+    if "ws_gate" in p:
+        flat = h.reshape(B, S, D)
+        y = y + dense(
+            silu(dense(flat, p["ws_gate"])) * dense(flat, p["ws_up"]),
+            p["ws_down"],
+        )
+    return x + y, stats
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 block.
+# ---------------------------------------------------------------------------
+
+def _ssm_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    return s, d_inner, H, conv_dim
+
+
+def mamba_init(key, cfg: ModelConfig) -> Params:
+    s, d_inner, H, conv_dim = _ssm_dims(cfg)
+    D = cfg.d_model
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": zinit((D,)),
+        "w_xz": winit(ks[0], (D, 2 * d_inner)),
+        "w_bc": winit(ks[1], (D, 2 * s.n_groups * s.d_state)),
+        "w_dt": winit(ks[2], (D, H)),
+        "dt_bias": zinit((H,)),
+        "A_log": jnp.zeros((H,)),  # A = -exp(A_log) = -1 initially
+        "skip_D": jnp.ones((H,)),
+        "conv_w": winit(ks[3], (s.conv_width, conv_dim), scale=0.5),
+        "out_norm": zinit((d_inner,)),
+        "w_out": winit(ks[4], (d_inner, D)),
+    }
+
+
+def mamba_apply(
+    p: Params,
+    x,
+    *,
+    cfg: ModelConfig,
+    cache: Params | None = None,
+    ssd_impl: str = "pallas",
+    chunk_unroll: bool = False,
+):
+    """Mamba-2 (SSD) block. cache: {"conv": (B,K-1,convdim), "ssm": (B·H,N,P)}."""
+    s, d_inner, H, conv_dim = _ssm_dims(cfg)
+    B, S, D = x.shape
+    N, P, G = s.d_state, s.head_dim, s.n_groups
+
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    xz = dense(h, p["w_xz"])
+    xi, z = jnp.split(xz, 2, axis=-1)  # (B,S,d_inner) each
+    bc = dense(h, p["w_bc"])  # (B,S,2GN)
+    dt_raw = dense(h, p["w_dt"])  # (B,S,H)
+
+    conv_in = jnp.concatenate([xi, bc], axis=-1)  # (B,S,convdim)
+    conv_state = None if cache is None else cache["conv"]
+    conv_out, new_conv_state = causal_conv1d(conv_in, p["conv_w"], conv_state)
+    conv_out = silu(conv_out)
+    xi = conv_out[..., :d_inner]
+    Bmat, Cmat = jnp.split(conv_out[..., d_inner:], 2, axis=-1)  # (B,S,GN)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    loga = -jnp.exp(p["A_log"])[None, None, :] * dt  # (B,S,H) ≤ 0
+    # Heads: xd (B,S,H,P); B/C broadcast over heads within each group.
+    xh = xi.reshape(B, S, H, P)
+    xd = xh * dt[..., None].astype(xh.dtype)
+    heads_per_group = H // G
+    Bh = jnp.repeat(Bmat.reshape(B, S, G, N), heads_per_group, axis=2)
+    Ch = jnp.repeat(Cmat.reshape(B, S, G, N), heads_per_group, axis=2)
+
+    def fold(a):  # (B,S,H,...) → (B·H,S,...)
+        return a.transpose(0, 2, 1, *range(3, a.ndim)).reshape(
+            B * H, S, *a.shape[3:]
+        )
+
+    xd_f, loga_f, B_f, C_f = fold(xd), fold(loga[..., None])[..., 0], fold(Bh), fold(Ch)
+    h0 = None if cache is None else cache["ssm"]
+    if cache is None or S > 1:
+        y_f, hT = ssd_scan(xd_f, loga_f, B_f, C_f, h0, impl=ssd_impl,
+                           chunk_unroll=chunk_unroll)
+    else:
+        hT, y_step = ssd_decode_step(
+            h0, xd_f[:, 0], loga_f[:, 0], B_f[:, 0], C_f[:, 0]
+        )
+        y_f = y_step[:, None]
+    y = y_f.reshape(B, H, S, P).transpose(0, 2, 1, 3)  # (B,S,H,P)
+    y = y + xh.astype(y.dtype) * p["skip_D"][None, None, :, None]
+    y = y.reshape(B, S, d_inner)
+    y = rms_norm(y * silu(z), p["out_norm"], cfg.norm_eps)
+    out = x + dense(y, p["w_out"])
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv_state, "ssm": hT}
+    return out, new_cache

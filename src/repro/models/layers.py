@@ -1,0 +1,105 @@
+"""Model primitives: norms, rotary embeddings, initializers.
+
+Functional style: params are nested dicts of jnp arrays; every layer is a
+pure function. Weights are stored 2-D (d_in, d_out_flat) so tensor-parallel
+sharding over the flattened output dim always divides the mesh (DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x, w, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def dense(x, w, b=None):
+    y = x @ w.astype(x.dtype)
+    if b is not None:
+        y = y + b.astype(x.dtype)
+    return y
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (standard + multimodal sections).
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float = 1e4, sections: tuple[int, ...] = ()):
+    """x: (B, H, S, D); positions: (B, S) or (B, S, len(sections)) for M-RoPE.
+
+    With ``sections`` (Qwen2-VL M-RoPE), the half-dim frequency bands are
+    split into len(sections) groups, each rotated by its own position stream
+    (temporal / height / width). Text-only streams pass identical positions
+    in all sections, which reduces exactly to standard RoPE.
+    """
+    B, H, S, D = x.shape
+    half = D // 2
+    inv = rope_freqs(D, theta)  # (half,)
+    if sections:
+        assert sum(sections) == half, (sections, half)
+        assert positions.ndim == 3 and positions.shape[-1] == len(sections)
+        pos_parts = []
+        for i, sec in enumerate(sections):
+            pos_parts.append(
+                jnp.broadcast_to(positions[..., i : i + 1], (B, S, sec))
+            )
+        pos = jnp.concatenate(pos_parts, axis=-1)  # (B, S, half)
+        ang = pos.astype(jnp.float32) * inv[None, None, :]
+    else:
+        if positions.ndim == 3:
+            positions = positions[..., 0]
+        ang = positions[..., None].astype(jnp.float32) * inv[None, None, :]
+    cos = jnp.cos(ang)[:, None]  # (B, 1, S, half)
+    sin = jnp.sin(ang)[:, None]
+    x1, x2 = x[..., :half], x[..., half:]
+    dt = x.dtype
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1
+    ).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Initializers.
+# ---------------------------------------------------------------------------
+
+def winit(key, shape, scale=None, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) > 1 else shape[-1]
+    scale = (fan_in ** -0.5) if scale is None else scale
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def zinit(shape, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype)
+
+
+def causal_conv1d(x, w, state=None):
+    """Depthwise causal conv. x: (B, S, C); w: (K, C). Returns (y, new_state).
+
+    ``state`` is the last K−1 inputs from the previous segment (B, K−1, C);
+    None means zero history (segment start).
+    """
+    B, S, C = x.shape
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((B, K - 1, C), x.dtype)
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)  # (B, S+K-1, C)
+    y = sum(
+        xp[:, i : i + S, :] * w[i][None, None, :].astype(x.dtype) for i in range(K)
+    )
+    new_state = xp[:, S:, :] if K > 1 else state
+    return y, new_state

@@ -1,0 +1,72 @@
+"""Model + input-spec factory."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeCfg
+from .lm import LM, _dtype
+
+
+def build_model(cfg: ModelConfig, **kw) -> LM:
+    return LM(cfg=cfg, **kw)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeCfg) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of a cell.
+
+    Training/prefill: token batch (+ stub modality inputs).
+    Decode: one new token; the KV/SSM caches are provided separately by
+    ``cache_specs`` (they are donated step state, not fresh inputs).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    dt = _dtype(cfg)
+    tok = jax.ShapeDtypeStruct
+
+    if shape.kind == "decode":
+        batch = {"tokens": tok((B, 1), jnp.int32)}
+        return batch
+
+    batch = {"tokens": tok((B, S), jnp.int32)}
+    if cfg.family == "audio":
+        # Conv frontend stub: precomputed frame embeddings at 2× downsample.
+        batch["frames"] = tok((B, max(S // 2, 8), cfg.d_model), dt)
+    if cfg.family == "vlm":
+        n_patch = min(256, S)
+        batch["patch_embeds"] = tok((B, n_patch, cfg.d_model), dt)
+        batch["positions"] = tok((B, S, len(cfg.mrope_sections)), jnp.int32)
+    return batch
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeCfg) -> dict | None:
+    """ShapeDtypeStruct pytree for the decode caches of a cell."""
+    if shape.kind != "decode":
+        return None
+    model = build_model(cfg)
+    B, S = shape.global_batch, shape.seq_len
+
+    def make(p=None):
+        enc_out = None
+        if cfg.family == "audio":
+            enc_out = jnp.zeros((B, max(S // 2, 8), cfg.d_model), _dtype(cfg))
+        return model.init_cache(p, B, S, enc_out=enc_out)
+
+    return jax.eval_shape(lambda: make(None))
+
+
+def concrete_inputs(cfg: ModelConfig, shape: ShapeCfg, seed: int = 0) -> dict:
+    """Materialized random inputs (smoke tests / examples)."""
+    specs = input_specs(cfg, shape)
+    rng = jax.random.PRNGKey(seed)
+    out = {}
+    for name, spec in specs.items():
+        rng, k = jax.random.split(rng)
+        if spec.dtype == jnp.int32 and name in ("tokens",):
+            out[name] = jax.random.randint(k, spec.shape, 0, cfg.vocab_size)
+        elif spec.dtype == jnp.int32:
+            pos = jnp.arange(spec.shape[1])[None, :, None]
+            out[name] = jnp.broadcast_to(pos, spec.shape).astype(jnp.int32)
+        else:
+            out[name] = jax.random.normal(k, spec.shape, spec.dtype) * 0.02
+    return out

@@ -1,0 +1,169 @@
+"""Sharding rules: TP + FSDP for params/optimizer states, DP/SP for data.
+
+Strategy (DESIGN.md §8):
+  * 2-D weights (d_model, flat_out) → P(fsdp_axis, tp_axis): tensor
+    parallelism over the flattened output dim (always mesh-divisible by
+    construction), ZeRO/FSDP over the d_model dim.
+  * transposed weights (flat_in, d_model) → P(tp_axis, fsdp_axis).
+  * expert weights (E, d, f) → P(tp_axis, fsdp_axis, None): expert
+    parallelism over the model axis.
+  * embed (V, D) → P(tp_axis, fsdp_axis) (vocab-parallel).
+  * 1-D params → replicated.
+  * every rule is divisibility-checked against the mesh; non-divisible dims
+    fall back to replication (never a compile error).
+
+Optimizer states share their param's spec ("ZeRO-3-alike": params, grads
+and Adam moments all sharded the same way). Batch dims shard over
+("pod", "data"); decode caches shard heads over model when divisible, else
+sequence over model (flash-decode-style).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Param-name → (spec template, trailing ndim) — leading stack dims get None.
+_TP, _FSDP = "model", "data"
+_RULES: dict[str, tuple] = {
+    "embed": (_TP, _FSDP),
+    "lm_head": (_FSDP, _TP),
+    "wq": (_FSDP, _TP),
+    "wk": (_FSDP, _TP),
+    "wv": (_FSDP, _TP),
+    "wo": (_TP, _FSDP),
+    "wi_gate": (_FSDP, _TP),
+    "wi_up": (_FSDP, _TP),
+    "wdown": (_TP, _FSDP),
+    "router": (_FSDP, None),
+    "we_gate": (_TP, _FSDP, None),
+    "we_up": (_TP, _FSDP, None),
+    "we_down": (_TP, None, _FSDP),
+    "ws_gate": (_FSDP, _TP),
+    "ws_up": (_FSDP, _TP),
+    "ws_down": (_TP, _FSDP),
+    "w_xz": (_FSDP, _TP),
+    "w_bc": (_FSDP, _TP),
+    "w_dt": (_FSDP, _TP),
+    "conv_w": (None, _TP),
+    "w_out": (_TP, _FSDP),
+}
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _fit(spec: tuple, shape: tuple, mesh: Mesh) -> P:
+    """Divisibility-checked spec: non-divisible dims are replicated."""
+    out = []
+    for dim, ax in zip(shape, spec):
+        if ax is not None and ax in mesh.shape and dim % _axis_size(mesh, ax) == 0:
+            out.append(ax)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def param_pspec(path: tuple, leaf, mesh: Mesh, mode: str = "tp_fsdp") -> P:
+    name = None
+    for entry in reversed(path):
+        key = getattr(entry, "key", getattr(entry, "idx", None))
+        if isinstance(key, str):
+            name = key
+            break
+    nd = leaf.ndim
+    rule = _RULES.get(name)
+    if rule is None or nd < len(rule):
+        return P()  # replicate (norms, biases, scalars)
+    if mode == "tp_only":  # replicate along data (no FSDP) — perf knob
+        rule = tuple(None if ax == _FSDP else ax for ax in rule)
+    elif mode != "tp_fsdp":
+        raise ValueError(f"unknown sharding mode {mode!r}")
+    lead = nd - len(rule)
+    return _fit((None,) * lead + tuple(rule), leaf.shape, mesh)
+
+
+def param_shardings(params: Any, mesh: Mesh, mode: str = "tp_fsdp") -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, param_pspec(path, leaf, mesh, mode)),
+        params,
+    )
+
+
+def batch_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def batch_shardings(batch: Any, mesh: Mesh) -> Any:
+    axes = batch_axes(mesh)
+    bsz = int(np.prod([mesh.shape[a] for a in axes]))
+
+    def spec(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        lead = axes if leaf.shape[0] % bsz == 0 else None
+        return NamedSharding(mesh, P(lead, *([None] * (leaf.ndim - 1))))
+
+    return jax.tree.map(spec, batch)
+
+
+def cache_shardings(cache: Any, mesh: Mesh) -> Any:
+    """Decode caches: batch→(pod,data); heads→model if divisible, else
+    sequence→model (distributed flash-decode); SSD state dims likewise."""
+    axes = batch_axes(mesh)
+    bsz = int(np.prod([mesh.shape[a] for a in axes]))
+    tp = _axis_size(mesh, _TP)
+
+    def spec(path, leaf):
+        name = None
+        for entry in reversed(path):
+            key = getattr(entry, "key", None)
+            if isinstance(key, str):
+                name = key
+                break
+        shape = leaf.shape
+        nd = leaf.ndim
+        if name in ("k", "v") and nd >= 4:
+            # (..., B, Hkv, S, dh) possibly with leading stack dims
+            lead = [None] * (nd - 4)
+            B, H, S, dh = shape[-4:]
+            bax = axes if B % bsz == 0 and bsz > 1 else None
+            if H % tp == 0:
+                return P(*lead, bax, _TP, None, None)
+            if S % tp == 0:
+                return P(*lead, bax, None, _TP, None)
+            return P(*lead, bax, None, None, None)
+        if name == "ssm" and nd >= 3:
+            lead = [None] * (nd - 3)
+            BH, N, Pp = shape[-3:]
+            first = _TP if BH % tp == 0 else None
+            return P(*lead, first, None, None)
+        if name == "conv" and nd >= 3:
+            lead = [None] * (nd - 3)
+            B, K, C = shape[-3:]
+            bax = axes if B % bsz == 0 and bsz > 1 else None
+            cax = _TP if C % tp == 0 else None
+            return P(*lead, bax, None, cax)
+        if name == "enc_out" and nd == 3:
+            B, S, D = shape
+            bax = axes if B % bsz == 0 and bsz > 1 else None
+            return P(bax, None, None)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, spec(path, leaf)), cache
+    )
+
+
+def default_act_pspec(mesh: Mesh) -> tuple:
+    """Activation constraint between blocks: batch over (pod, data),
+    sequence over model (Megatron-style sequence parallelism)."""
+    return (batch_axes(mesh), _TP, None)

@@ -1,0 +1,166 @@
+"""pjit-able train_step / serve_step builders for every (arch × shape) cell."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeCfg
+from ..models.lm import LM
+from ..models.registry import build_model, cache_specs, input_specs
+from ..train.optimizer import AdamW, global_norm, warmup_stable_decay
+from .sharding import (
+    batch_shardings,
+    cache_shardings,
+    default_act_pspec,
+    param_shardings,
+)
+
+
+def make_model_for_cell(cfg: ModelConfig, mesh: Mesh | None, *,
+                        remat: bool = True, sp: bool = True,
+                        unroll: bool = False,
+                        ssd_impl: str = "chunked") -> LM:
+    """Model wired for distributed lowering (chunked impls, remat, SP)."""
+    act = default_act_pspec(mesh) if (mesh is not None and sp) else None
+    return build_model(
+        cfg, attn_impl="chunked", ssd_impl=ssd_impl, remat=remat,
+        act_pspec=act, unroll=unroll,
+    )
+
+
+def make_optimizer(total_steps: int = 10_000, peak_lr: float = 3e-4) -> AdamW:
+    return AdamW(schedule=warmup_stable_decay(peak_lr, total_steps))
+
+
+def make_train_step(model: LM, optimizer: AdamW):
+    """(params, opt_state, batch) → (params, opt_state, metrics)."""
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: model.loss(p, batch), has_aux=True
+        )(params)
+        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        out_metrics = {
+            "loss": loss,
+            "grad_norm": global_norm(grads),
+            "lr": optimizer.schedule(new_opt["step"]),
+        }
+        if "expert_load" in metrics:
+            out_metrics["expert_load"] = metrics["expert_load"]
+        return new_params, new_opt, out_metrics
+
+    return train_step
+
+
+def make_serve_step(model: LM):
+    """(params, cache, tokens(B,1)) → (next_tokens, cache)."""
+
+    def serve_step(params, cache, tokens):
+        logits, cache = model.decode_step(params, cache, tokens)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        return next_tok, cache
+
+    return serve_step
+
+
+def lower_cell(
+    cfg: ModelConfig,
+    shape: ShapeCfg,
+    mesh: Mesh,
+    *,
+    remat: bool = True,
+    sp: bool = True,
+    donate: bool = True,
+    unroll: bool = False,
+    shard_mode: str = "tp_fsdp",
+    ssd_impl: str = "chunked",
+):
+    """Lower (not compile) the cell's step function on the mesh.
+
+    train/prefill → train_step over abstract params/opt-state/batch;
+    decode       → serve_step over abstract params/cache/token.
+    Returns (lowered, meta dict).
+    """
+    model = make_model_for_cell(cfg, mesh, remat=remat, sp=sp, unroll=unroll,
+                                ssd_impl=ssd_impl)
+    specs_in = input_specs(cfg, shape)
+
+    with mesh:
+        params_shape = jax.eval_shape(
+            lambda: model.init(jax.random.PRNGKey(0))
+        )
+        # "zero1": params replicated over data (no per-layer FSDP
+        # gathers); optimizer moments still sharded over data (ZeRO-1).
+        p_mode = "tp_only" if shard_mode == "zero1" else shard_mode
+        o_mode = "tp_fsdp" if shard_mode == "zero1" else shard_mode
+        p_shard = param_shardings(params_shape, mesh, mode=p_mode)
+        b_shard = batch_shardings(specs_in, mesh)
+
+        import math
+
+        n_params = sum(
+            math.prod(a.shape) for a in jax.tree.leaves(params_shape)
+        )
+        if shape.kind == "train":
+            optimizer = make_optimizer()
+            opt_shape = jax.eval_shape(lambda: optimizer.init(params_shape))
+            o_shard = param_shardings(opt_shape, mesh, mode=o_mode)
+            o_shard["step"] = NamedSharding(mesh, P())
+            step = make_train_step(model, optimizer)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_shard, o_shard, b_shard),
+                out_shardings=(p_shard, o_shard, None),
+                donate_argnums=(0, 1) if donate else (),
+            )
+            lowered = jitted.lower(params_shape, opt_shape, specs_in)
+            return lowered, {"kind": "train", "n_params": n_params}
+
+        if shape.kind == "prefill":
+            # Inference-prefill: pure forward, logits sharded over
+            # (batch, ·, vocab-TP when divisible); no optimizer/backward.
+            import numpy as np
+
+            from .sharding import batch_axes
+
+            baxes = batch_axes(mesh)
+            bsz = int(np.prod([mesh.shape[a] for a in baxes]))
+            tp = mesh.shape["model"]
+            logits_shard = NamedSharding(
+                mesh,
+                P(
+                    baxes if shape.global_batch % bsz == 0 else None,
+                    None,
+                    "model" if cfg.vocab_size % tp == 0 else None,
+                ),
+            )
+
+            def prefill_step(params, batch):
+                out = model.apply(params, batch)
+                return out["logits"]
+
+            jitted = jax.jit(
+                prefill_step,
+                in_shardings=(p_shard, b_shard),
+                out_shardings=logits_shard,
+            )
+            lowered = jitted.lower(params_shape, specs_in)
+            return lowered, {"kind": "prefill", "n_params": n_params}
+
+        # decode
+        c_specs = cache_specs(cfg, shape)
+        c_shard = cache_shardings(c_specs, mesh)
+        step = make_serve_step(model)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_shard, c_shard, b_shard["tokens"]),
+            out_shardings=(None, c_shard),
+            donate_argnums=(1,) if donate else (),
+        )
+        lowered = jitted.lower(params_shape, c_specs, specs_in["tokens"])
+        return lowered, {"kind": "decode", "n_params": n_params}

@@ -1,0 +1,140 @@
+"""Sharded checkpointing: atomic, async, resharding-aware, CRC-verified.
+
+Layout (one directory per step):
+    <dir>/step_000042/
+        manifest.json     # step, tree structure, shapes/dtypes, crc32s,
+                          # mesh shape, PRNG key, data-iterator state
+        arr_<n>.npy       # one file per leaf (process-local full arrays)
+        _COMMITTED        # written last — marks the checkpoint atomic
+
+Restore accepts a *different* mesh (elastic scaling): arrays are loaded
+full and re-placed with the new shardings via device_put.
+"""
+
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+import zlib
+from pathlib import Path
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _leaves_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return flat, treedef
+
+
+def save_checkpoint(
+    directory: str | Path,
+    step: int,
+    tree: Any,
+    *,
+    extra: dict | None = None,
+    keep: int = 3,
+    async_: bool = False,
+) -> Path | threading.Thread:
+    """Write checkpoint; returns final path (or the thread if async)."""
+    directory = Path(directory)
+    host_tree = jax.tree.map(np.asarray, tree)  # device → host copy (sync)
+
+    def _write() -> Path:
+        tmp = directory / f".tmp_step_{step:09d}"
+        final = directory / f"step_{step:09d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        flat, _ = _leaves_with_paths(host_tree)
+        manifest = {"step": step, "extra": extra or {}, "leaves": []}
+        for i, (path, leaf) in enumerate(flat):
+            fname = f"arr_{i}.npy"
+            np.save(tmp / fname, leaf)
+            manifest["leaves"].append(
+                {
+                    "path": jax.tree_util.keystr(path),
+                    "file": fname,
+                    "shape": list(leaf.shape),
+                    "dtype": str(leaf.dtype),
+                    "crc32": zlib.crc32(np.ascontiguousarray(leaf).tobytes()),
+                }
+            )
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        (tmp / "_COMMITTED").write_text("ok")
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)
+        _gc(directory, keep)
+        return final
+
+    if async_:
+        t = threading.Thread(target=_write, daemon=True)
+        t.start()
+        return t
+    return _write()
+
+
+def _gc(directory: Path, keep: int) -> None:
+    ckpts = sorted(d for d in directory.glob("step_*") if d.is_dir())
+    for d in ckpts[:-keep]:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def latest_step(directory: str | Path) -> int | None:
+    directory = Path(directory)
+    steps = [
+        int(d.name.split("_")[1])
+        for d in directory.glob("step_*")
+        if (d / "_COMMITTED").exists()
+    ]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(
+    directory: str | Path,
+    like: Any,
+    *,
+    step: int | None = None,
+    shardings: Any = None,
+    verify: bool = True,
+) -> tuple[Any, dict]:
+    """Load into the structure of ``like``; optional resharding placement.
+
+    Returns (tree, extra). Raises FileNotFoundError if no committed
+    checkpoint exists.
+    """
+    directory = Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint under {directory}")
+    final = directory / f"step_{step:09d}"
+    manifest = json.loads((final / "manifest.json").read_text())
+    flat_like, treedef = _leaves_with_paths(like)
+    if len(flat_like) != len(manifest["leaves"]):
+        raise ValueError(
+            f"checkpoint has {len(manifest['leaves'])} leaves, "
+            f"expected {len(flat_like)}"
+        )
+    leaves = []
+    for (path, leaf_like), rec in zip(flat_like, manifest["leaves"]):
+        if jax.tree_util.keystr(path) != rec["path"]:
+            raise ValueError(f"leaf mismatch: {rec['path']} vs {path}")
+        arr = np.load(final / rec["file"])
+        if verify:
+            crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+            if crc != rec["crc32"]:
+                raise IOError(f"crc mismatch in {rec['file']} (corrupt ckpt)")
+        if tuple(arr.shape) != tuple(leaf_like.shape):
+            raise ValueError(
+                f"shape mismatch at {rec['path']}: {arr.shape} vs "
+                f"{leaf_like.shape}"
+            )
+        leaves.append(arr.astype(leaf_like.dtype))
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.device_put(tree, shardings)
+    return tree, manifest["extra"]

@@ -1,0 +1,48 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+Top-k sparsification per leaf with an error-feedback accumulator: the
+residual of the compressed gradient is carried into the next step, which
+preserves convergence (Stich et al.; 1-bit Adam lineage). At scale this
+shrinks the DP all-reduce payload by ~(1 − k/n); the OCS fabric scheduler
+sees correspondingly smaller DP demand entries.
+
+Pure pytree functions so they compose with any optimizer.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_topk(grads: Any, error: Any, frac: float = 0.05):
+    """Returns (compressed grads, new error). Keeps top-frac |g| per leaf."""
+
+    def one(g, e):
+        g = g.astype(jnp.float32) + e
+        flat = g.reshape(-1)
+        k = max(1, int(flat.size * frac))
+        thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+        mask = jnp.abs(g) >= thresh
+        sent = jnp.where(mask, g, 0.0)
+        return sent, g - sent
+
+    out = jax.tree.map(one, grads, error)
+    sent = jax.tree.map(lambda x: x[0], out,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    new_err = jax.tree.map(lambda x: x[1], out,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    return sent, new_err
+
+
+def compression_ratio(grads: Any, frac: float = 0.05) -> float:
+    """Payload ratio vs dense all-reduce (values + indices, fp32+int32)."""
+    total = sum(g.size for g in jax.tree.leaves(grads))
+    kept = sum(max(1, int(g.size * frac)) for g in jax.tree.leaves(grads))
+    return (kept * 8) / (total * 4)

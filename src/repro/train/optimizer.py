@@ -1,0 +1,102 @@
+"""Optimizers + LR schedules (pure pytree functions, no external deps).
+
+AdamW with decoupled weight decay and global-norm clipping; schedules
+include WSD (warmup–stable–decay, the MiniCPM schedule) and cosine.
+Optimizer state mirrors the param pytree, so the same sharding rules apply
+(ZeRO-style: states are sharded exactly like their params).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+def warmup_stable_decay(
+    peak_lr: float, total_steps: int, warmup: float = 0.01, decay: float = 0.1,
+    floor: float = 0.1,
+) -> Callable:
+    """WSD: linear warmup → constant → linear decay to floor·peak."""
+    w = max(int(total_steps * warmup), 1)
+    d = max(int(total_steps * decay), 1)
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * jnp.minimum(step / w, 1.0)
+        decay_start = total_steps - d
+        frac = jnp.clip((step - decay_start) / d, 0.0, 1.0)
+        return jnp.where(
+            step < decay_start, warm, peak_lr * (1.0 - (1.0 - floor) * frac)
+        )
+
+    return lr
+
+
+def cosine_schedule(peak_lr: float, total_steps: int, warmup: float = 0.01,
+                    floor: float = 0.1) -> Callable:
+    w = max(int(total_steps * warmup), 1)
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * jnp.minimum(step / w, 1.0)
+        t = jnp.clip((step - w) / jnp.maximum(total_steps - w, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < w, warm, peak_lr * cos)
+
+    return lr
+
+
+@dataclass(frozen=True)
+class AdamW:
+    schedule: Callable
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float | None = 1.0
+
+    def init(self, params: Params) -> dict:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+        return {
+            "mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(self, grads: Params, state: dict, params: Params):
+        step = state["step"] + 1
+        if self.clip_norm is not None:
+            gn = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gn, 1e-12))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree.map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+            state["mu"], grads,
+        )
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["nu"], grads,
+        )
+        lr = self.schedule(step)
+        c1 = 1 - b1 ** step.astype(jnp.float32)
+        c2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m, v):
+            u = (m / c1) / (jnp.sqrt(v / c2) + self.eps)
+            u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, {"mu": mu, "nu": nu, "step": step}
+
+
+def global_norm(tree: Params):
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
+    )

@@ -1,0 +1,94 @@
+"""Decode-with-cache must match the full forward pass (teacher forcing).
+
+Covers every cache mechanism: dense KV, GQA, ring-buffer sliding window,
+MoE, SSD state + conv state, hybrid shared-attn, M-RoPE, enc-dec cross-attn.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ShapeCfg
+from repro.configs.registry import ARCHS
+from repro.models.registry import build_model, concrete_inputs
+
+S = 24
+SHAPE = ShapeCfg("dec_smoke", seq_len=S, global_batch=2, kind="train")
+
+DECODE_ARCHS = [
+    "granite-3-8b",      # dense GQA
+    "gemma3-27b",        # sliding-window ring buffer + pattern
+    "qwen3-moe-30b-a3b", # MoE
+    "deepseek-moe-16b",  # MoE with shared experts
+    "mamba2-2.7b",       # SSD + conv state
+    "zamba2-1.2b",       # hybrid shared attention
+    "qwen2-vl-2b",       # M-RoPE
+    "whisper-tiny",      # enc-dec cross attention
+]
+
+
+@pytest.mark.parametrize("arch", DECODE_ARCHS)
+def test_decode_matches_forward(arch):
+    from dataclasses import replace
+
+    cfg = ARCHS[arch].reduced()
+    if cfg.moe:
+        # Capacity-based MoE drops tokens under contention; the full forward
+        # (T=B·S tokens) and decode (T=B tokens) see different contention.
+        # For exact equivalence, give every expert full capacity.
+        cfg = replace(
+            cfg, moe=replace(cfg.moe, capacity_factor=cfg.moe.num_experts / cfg.moe.top_k)
+        )
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = concrete_inputs(cfg, SHAPE)
+    tokens = batch["tokens"]
+
+    full = model.apply(params, batch)["logits"]  # (B, S, V)
+
+    enc_out = None
+    if cfg.family == "audio":
+        enc_out = model.encode(params, batch["frames"])
+    cache = model.init_cache(params, batch_size=2, max_len=S, enc_out=enc_out)
+    got = []
+    for t in range(S):
+        logits, cache = model.decode_step(params, cache, tokens[:, t : t + 1])
+        got.append(logits[:, 0])
+    got = jnp.stack(got, axis=1)  # (B, S, V)
+
+    if cfg.family == "vlm":
+        # Decode replay has no patch embeddings; compare a pure-text batch.
+        full = model.apply(params, {"tokens": tokens})["logits"]
+    np.testing.assert_allclose(
+        np.array(got), np.array(full), rtol=2e-3, atol=2e-3
+    )
+
+
+def test_gemma3_ring_buffer_cache_is_window_sized():
+    cfg = ARCHS["gemma3-27b"].reduced()
+    model = build_model(cfg)
+    cache = model.init_cache(None, batch_size=1, max_len=S)
+    # Local layers: cache length == window (< S); global layers: full length.
+    local_len = cache["periods"][0]["k"].shape[3]
+    global_len = cache["periods"][-1]["k"].shape[3]
+    assert local_len == cfg.window < S or local_len == S
+    assert global_len == S
+
+
+def test_decode_greedy_generation_deterministic():
+    cfg = ARCHS["granite-3-8b"].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+
+    def gen(seed):
+        cache = model.init_cache(params, 1, 16)
+        tok = jnp.full((1, 1), 7, jnp.int32)
+        out = []
+        for _ in range(8):
+            logits, cache = model.decode_step(params, cache, tok)
+            tok = logits.argmax(-1).astype(jnp.int32)
+            out.append(int(tok[0, 0]))
+        return out
+
+    assert gen(0) == gen(1)

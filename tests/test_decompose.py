@@ -1,0 +1,121 @@
+"""DECOMPOSE: exactly-k permutations, coverage, REFINE variants."""
+
+import numpy as np
+import pytest
+
+from repro.core import decompose, degree, refine_greedy, refine_lp, refine_signed
+
+FIG2 = np.array([
+    [0.6, 0.3, 0, 0.1],
+    [0, 0.61, 0.39, 0],
+    [0, 0.09, 0.61, 0.3],
+    [0.4, 0, 0, 0.6],
+])
+
+
+def random_demand(rng, n, density=0.3, doubly_stochastic=False):
+    D = rng.random((n, n)) * (rng.random((n, n)) < density)
+    if not (D > 0).any():
+        D[rng.integers(n), rng.integers(n)] = 1.0
+    if doubly_stochastic:
+        for _ in range(50):  # Sinkhorn on the support
+            D = D / np.maximum(D.sum(1, keepdims=True), 1e-12)
+            D = D / np.maximum(D.sum(0, keepdims=True), 1e-12)
+    return D
+
+
+def sum_of_permutations(rng, n, k):
+    D = np.zeros((n, n))
+    for _ in range(k):
+        D[np.arange(n), rng.permutation(n)] += rng.random() + 0.05
+    return D
+
+
+def test_fig2_example():
+    dec = decompose(FIG2)
+    assert dec.k == 3 == degree(FIG2)
+    assert dec.covers(FIG2)
+    # Total weight should be near-minimal (paper example: 1.01).
+    assert dec.total_weight() <= 1.10
+
+
+@pytest.mark.parametrize("seed", range(6))
+@pytest.mark.parametrize("n", [5, 12, 24])
+def test_exactly_degree_permutations(seed, n):
+    rng = np.random.default_rng(seed)
+    D = random_demand(rng, n)
+    dec = decompose(D)
+    assert dec.k == degree(D)
+    assert dec.covers(D)
+
+
+@pytest.mark.parametrize("k", [1, 3, 7])
+def test_sum_of_k_perms_decomposes_into_k(k):
+    rng = np.random.default_rng(k)
+    D = sum_of_permutations(rng, 20, k)
+    dec = decompose(D)
+    assert dec.k == degree(D) <= k
+    assert dec.covers(D)
+
+
+def test_alpha_modes_both_cover():
+    rng = np.random.default_rng(0)
+    D = random_demand(rng, 16, density=0.2)
+    for mode in ("covered_support", "all_matched"):
+        dec = decompose(D, alpha_mode=mode)
+        assert dec.covers(D)
+        assert dec.k == degree(D)
+
+
+def test_refine_lp_not_worse_than_greedy():
+    rng = np.random.default_rng(3)
+    D = random_demand(rng, 10, density=0.4)
+    dec = decompose(D)  # greedy-refined
+    lp = refine_lp(D, dec.alphas, dec.perms)
+    greedy_total = dec.total_weight()
+    assert sum(lp) <= greedy_total + 1e-9
+    # LP result still covers.
+    from repro.core import Decomposition
+    assert Decomposition(dec.perms, list(lp)).covers(D)
+
+
+def test_refine_signed_covers_and_not_worse():
+    rng = np.random.default_rng(4)
+    D = random_demand(rng, 10, density=0.5)
+    dec = decompose(D, refine="signed")
+    assert dec.covers(D)
+    dec_g = decompose(D, refine="greedy")
+    assert dec.total_weight() <= dec_g.total_weight() + 1e-9
+
+
+def test_refine_greedy_certifies_coverage():
+    rng = np.random.default_rng(5)
+    D = random_demand(rng, 8, density=0.6)
+    dec = decompose(D)
+    raw = [a * 0.5 for a in dec.alphas]  # break coverage
+    fixed = refine_greedy(D, raw, dec.perms)
+    from repro.core import Decomposition
+    assert Decomposition(dec.perms, fixed).covers(D)
+
+
+def test_dense_matrix():
+    rng = np.random.default_rng(6)
+    D = rng.random((12, 12)) + 0.01
+    dec = decompose(D)
+    assert dec.k == 12
+    assert dec.covers(D)
+
+
+def test_diagonal_matrix():
+    D = np.diag([1.0, 2.0, 3.0])
+    dec = decompose(D)
+    assert dec.k == 1
+    assert dec.covers(D)
+    assert dec.total_weight() == pytest.approx(3.0)
+
+
+def test_rejects_bad_input():
+    with pytest.raises(ValueError):
+        decompose(np.ones((2, 3)))
+    with pytest.raises(ValueError):
+        decompose(-np.ones((2, 2)))

@@ -1,0 +1,60 @@
+"""Validate dry-run artifacts (when present) and the fabric tie-in.
+
+These tests are skipped if the dry-run hasn't produced artifacts yet —
+they gate the §Dry-run/§Roofline deliverables when it has.
+"""
+
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+DRYRUN = Path(__file__).resolve().parents[1] / "benchmarks" / "out" / "dryrun"
+
+artifacts = sorted(DRYRUN.glob("*__pod1.json")) if DRYRUN.exists() else []
+pod2 = sorted(DRYRUN.glob("*__pod2.json")) if DRYRUN.exists() else []
+
+
+@pytest.mark.skipif(not artifacts, reason="no dry-run artifacts yet")
+def test_artifacts_have_roofline_terms():
+    for p in artifacts:
+        a = json.loads(p.read_text())
+        r = a["roofline"]
+        assert r["compute_s"] >= 0 and r["memory_s"] > 0
+        assert r["dominant"] in ("compute", "memory", "collective")
+        assert a["n_chips"] == 256
+
+
+@pytest.mark.skipif(not pod2, reason="no multi-pod artifacts yet")
+def test_multi_pod_artifacts_shard_the_pod_axis():
+    for p in pod2:
+        a = json.loads(p.read_text())
+        assert a["n_chips"] == 512
+        # multi-pod training cells must communicate across the pod axis
+        if a["kind"] == "train":
+            assert a["roofline"]["collectives"]["total_wire_bytes"] > 0
+
+
+@pytest.mark.skipif(not artifacts, reason="no dry-run artifacts yet")
+def test_train_cells_have_sane_useful_ratio():
+    for p in artifacts:
+        a = json.loads(p.read_text())
+        if a["kind"] != "train" or not a["calibration"].get("applied"):
+            continue
+        u = a["roofline"]["useful_ratio"]
+        assert 0.05 < u <= 1.6, f"{p.name}: useful_ratio {u}"
+
+
+@pytest.mark.skipif(not artifacts, reason="no dry-run artifacts yet")
+def test_fabric_scheduling_from_artifact():
+    from repro.traffic.hlo_traffic import schedule_cell_demand
+
+    train = [p for p in artifacts if json.loads(p.read_text())["kind"] == "train"]
+    assert train
+    art = json.loads(train[0].read_text())
+    res, cct, D = schedule_cell_demand(art)
+    assert D.shape == (32, 32)
+    if D.max() > 0:
+        assert cct > 0
+        assert res.makespan >= res.lower_bound - 1e-9

@@ -1,0 +1,85 @@
+"""JAX auction solver + on-device decompose vs the exact numpy path."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from scipy.optimize import linear_sum_assignment
+
+from repro.core import degree, lower_bound, schedule_lpt, equalize
+from repro.core.jaxopt.auction import auction_maximize, auction_maximize_batch
+from repro.core.jaxopt.decompose_jax import (
+    decompose_jax,
+    lpt_schedule_jax,
+    spectra_jax,
+    to_decomposition,
+)
+
+
+@pytest.mark.parametrize("n", [4, 16, 33, 64])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_auction_optimal_vs_jv(n, seed):
+    rng = np.random.default_rng(seed)
+    W = rng.integers(0, 1000, (n, n)).astype(np.float32)
+    perm, conv = auction_maximize(jnp.array(W))
+    assert bool(conv)
+    perm = np.array(perm)
+    assert len(np.unique(perm)) == n  # valid permutation
+    ri, ci = linear_sum_assignment(W, maximize=True)
+    opt = W[ri, ci].sum()
+    got = W[np.arange(n), perm].sum()
+    assert got >= opt - 1e-3 * abs(opt)
+
+
+def test_auction_batched():
+    rng = np.random.default_rng(0)
+    Ws = rng.random((5, 24, 24)).astype(np.float32)
+    perms, convs = auction_maximize_batch(jnp.array(Ws))
+    assert bool(convs.all())
+    for b in range(5):
+        perm = np.array(perms[b])
+        ri, ci = linear_sum_assignment(Ws[b], maximize=True)
+        assert Ws[b][np.arange(24), perm].sum() >= Ws[b][ri, ci].sum() - 1e-3
+
+
+def test_auction_with_pallas_kernel_path():
+    rng = np.random.default_rng(1)
+    W = rng.integers(0, 500, (32, 32)).astype(np.float32)
+    p_plain, _ = auction_maximize(jnp.array(W), use_kernel=False)
+    p_kern, conv = auction_maximize(jnp.array(W), use_kernel=True)
+    assert bool(conv)
+    v_plain = W[np.arange(32), np.array(p_plain)].sum()
+    v_kern = W[np.arange(32), np.array(p_kern)].sum()
+    assert v_kern == pytest.approx(v_plain, rel=1e-5)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_decompose_jax_invariants(seed):
+    rng = np.random.default_rng(seed)
+    n = 16
+    D = (rng.random((n, n)) * (rng.random((n, n)) < 0.3)).astype(np.float32)
+    D[0, 1] = 0.9
+    dec = decompose_jax(jnp.array(D))
+    assert bool(dec.converged)
+    assert int(dec.k) == degree(D)
+    host = to_decomposition(dec)
+    assert host.covers(D, tol=1e-5)
+
+
+def test_spectra_jax_end_to_end():
+    rng = np.random.default_rng(3)
+    n, s, delta = 16, 4, 0.01
+    D = (rng.random((n, n)) * (rng.random((n, n)) < 0.4)).astype(np.float32)
+    D[2, 3] = 1.0
+    dec, assignment, loads, makespan = spectra_jax(jnp.array(D), s, delta)
+    k = int(dec.k)
+    # Real jobs all placed; padded rounds unplaced.
+    a = np.array(assignment)
+    assert (a[:k] >= 0).all() and (a[k:] == -1).all()
+    # Device LPT agrees with host LPT makespan on the same decomposition.
+    host = to_decomposition(dec)
+    host_sched = schedule_lpt(host, s, delta)
+    assert float(makespan) == pytest.approx(host_sched.makespan(), rel=1e-5)
+    # Host EQUALIZE finishes the pipeline; result ≥ lower bound.
+    final = equalize(host_sched)
+    final.validate(D, tol=1e-5)
+    assert final.makespan() >= lower_bound(D, s, delta) - 1e-6

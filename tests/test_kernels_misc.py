@@ -1,0 +1,53 @@
+"""auction_bid + demand_accum kernels vs oracles: shape/dtype sweeps."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.auction_bid.ops import masked_row_top2
+from repro.kernels.auction_bid.ref import masked_row_top2_ref
+from repro.kernels.demand_accum.ops import demand_accum
+from repro.kernels.demand_accum.ref import demand_accum_ref
+
+
+@pytest.mark.parametrize("n,m", [(4, 4), (8, 128), (100, 100), (64, 257), (33, 65)])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_auction_bid_kernel_sweep(n, m, dtype):
+    rng = np.random.default_rng(n * 1000 + m)
+    W = jnp.asarray(rng.standard_normal((n, m)) * 100, dtype)
+    p = jnp.asarray(rng.standard_normal((m,)), dtype)
+    v1, v2, j1 = masked_row_top2(W, p, interpret=True)
+    r1, r2, rj = masked_row_top2_ref(W, p)
+    np.testing.assert_allclose(np.array(v1), np.array(r1), rtol=1e-6)
+    np.testing.assert_allclose(np.array(v2), np.array(r2), rtol=1e-6)
+    assert np.array_equal(np.array(j1), np.array(rj))
+
+
+def test_auction_bid_ties_prefer_any_argmax():
+    W = jnp.zeros((4, 8), jnp.float32)
+    p = jnp.zeros((8,), jnp.float32)
+    v1, v2, j1 = masked_row_top2(W, p, interpret=True)
+    assert np.allclose(np.array(v1), 0.0)
+    assert np.allclose(np.array(v2), 0.0)
+    assert ((np.array(j1) >= 0) & (np.array(j1) < 8)).all()
+
+
+@pytest.mark.parametrize("T,n", [(16, 8), (100, 32), (513, 64), (2048, 128)])
+def test_demand_accum_sweep(T, n):
+    rng = np.random.default_rng(T + n)
+    src = jnp.asarray(rng.integers(0, n, T), jnp.int32)
+    dst = jnp.asarray(rng.integers(0, n, T), jnp.int32)
+    w = jnp.asarray(rng.random(T), jnp.float32)
+    D = demand_accum(src, dst, w, n=n, interpret=True)
+    D_ref = demand_accum_ref(src, dst, w, n)
+    np.testing.assert_allclose(np.array(D), np.array(D_ref), rtol=1e-5, atol=1e-5)
+
+
+def test_demand_accum_duplicate_events_accumulate():
+    src = jnp.asarray([1, 1, 1, 2], jnp.int32)
+    dst = jnp.asarray([3, 3, 3, 0], jnp.int32)
+    w = jnp.asarray([1.0, 2.0, 3.0, 5.0], jnp.float32)
+    D = demand_accum(src, dst, w, n=4, interpret=True)
+    assert float(D[1, 3]) == pytest.approx(6.0)
+    assert float(D[2, 0]) == pytest.approx(5.0)
+    assert float(np.array(D).sum()) == pytest.approx(11.0)

@@ -1,0 +1,52 @@
+"""Launcher CLIs run end-to-end (subprocess smoke tests)."""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+ENV = {"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"}
+
+
+def run_cli(args, timeout=420):
+    proc = subprocess.run(
+        [sys.executable, "-m", *args],
+        capture_output=True, text=True, timeout=timeout, env=ENV,
+        cwd=str(REPO),
+    )
+    assert proc.returncode == 0, f"STDOUT:{proc.stdout}\nSTDERR:{proc.stderr}"
+    return proc.stdout
+
+
+def test_train_cli_with_ocs(tmp_path):
+    out = run_cli([
+        "repro.launch.train", "--arch", "granite-3-8b", "--steps", "12",
+        "--batch", "2", "--seq", "32", "--ckpt-dir", str(tmp_path),
+        "--ocs-switches", "4", "--ocs-every", "5",
+    ])
+    rec = json.loads(out[out.index("{"):])
+    assert rec["steps"] == 12
+    assert rec["cct"], "OCS controller produced no CCT records"
+    # a checkpoint was committed
+    assert any(tmp_path.glob("step_*/_COMMITTED"))
+
+
+def test_serve_cli():
+    out = run_cli([
+        "repro.launch.serve", "--arch", "minicpm-2b", "--batch", "2",
+        "--prompt-len", "8", "--new-tokens", "8",
+    ])
+    assert "tok/s" in out
+
+
+def test_perf_variants_reference_valid_kwargs():
+    from repro.launch import perf
+
+    import inspect
+
+    from repro.launch.dryrun import run_cell
+
+    valid = set(inspect.signature(run_cell).parameters)
+    for name, kw in perf.VARIANTS.items():
+        assert set(kw) <= valid, f"variant {name} has unknown kwargs"

@@ -1,0 +1,65 @@
+"""§IV lower bounds: formulas, dominance, and LB ≤ achieved makespan."""
+
+import numpy as np
+import pytest
+
+from repro.core import lb_theorem1, lb_theorem2, lower_bound, spectra, spectra_pp
+
+
+def test_theorem1_example():
+    # Paper's example: doubly stochastic row with k_i=16 nonzeros, s=4:
+    # LB = (1 + 16δ)/4 = 1/4 + 4δ.
+    delta = 0.01
+    assert lb_theorem1(1.0, 16, 4, delta) == pytest.approx(0.25 + 4 * delta)
+
+
+def test_theorem1_small_k_uses_s():
+    # k_i < s → the δ term is δ·s/s = δ (the "w/s + δ" branch).
+    assert lb_theorem1(1.0, 2, 4, 0.1) == pytest.approx(1.0 / 4 + 0.1)
+
+
+def test_theorem2_single_switch():
+    # s=1, single element x: LB2 = δ + x.
+    assert lb_theorem2(np.array([0.7]), 1, 0.05) == pytest.approx(0.75)
+
+
+def test_theorem2_at_least_theorem1_when_applicable():
+    rng = np.random.default_rng(0)
+    for s in (2, 3, 4, 8):
+        for _ in range(20):
+            x = rng.random(s) + 0.01
+            w = x.sum()
+            lb1 = lb_theorem1(w, s, s, 0.02)
+            lb2 = lb_theorem2(x, s, 0.02)
+            assert lb2 >= lb1 - 1e-12
+
+
+def test_theorem2_strictly_better_when_unequal():
+    # Paper: strict when not all nonzero elements are equal.
+    x = np.array([0.9, 0.05, 0.05])
+    s, delta = 3, 0.01
+    assert lb_theorem2(x, s, delta) > lb_theorem1(x.sum(), s, s, delta) + 1e-9
+
+
+def test_theorem2_requires_s_elements():
+    with pytest.raises(ValueError):
+        lb_theorem2(np.array([1.0, 2.0]), 3, 0.1)
+
+
+@pytest.mark.parametrize("seed", range(5))
+@pytest.mark.parametrize("s", [1, 2, 4])
+def test_lb_below_spectra_makespan(seed, s):
+    rng = np.random.default_rng(seed)
+    n = 12
+    D = rng.random((n, n)) * (rng.random((n, n)) < 0.35)
+    D[0, 0] += 1.0
+    delta = 10 ** rng.uniform(-3, -1)
+    lb = lower_bound(D, s, delta)
+    assert lb > 0
+    for algo in (spectra, spectra_pp):
+        res = algo(D, s, delta)
+        assert res.makespan >= lb - 1e-9
+
+
+def test_lb_zero_matrix():
+    assert lower_bound(np.zeros((4, 4)), 2, 0.1) == 0.0

@@ -1,0 +1,79 @@
+"""Constrained MWM + Hungarian fallback correctness."""
+
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core.matching import (
+    critical_lines,
+    hungarian_min_cost,
+    max_weight_perfect_matching,
+    mwm_node_coverage,
+    perm_matrix,
+)
+
+
+def brute_force_max(W):
+    n = W.shape[0]
+    best, best_perm = -np.inf, None
+    for p in itertools.permutations(range(n)):
+        v = W[np.arange(n), list(p)].sum()
+        if v > best:
+            best, best_perm = v, np.array(p)
+    return best, best_perm
+
+
+@pytest.mark.parametrize("n", [2, 3, 4, 5, 6])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_hungarian_matches_bruteforce(n, seed):
+    rng = np.random.default_rng(seed)
+    W = rng.random((n, n))
+    best, _ = brute_force_max(W)
+    perm = hungarian_min_cost(-W)
+    assert np.isclose(W[np.arange(n), perm].sum(), best)
+
+
+@pytest.mark.parametrize("n", [3, 8, 17, 32, 64])
+def test_hungarian_matches_scipy(n):
+    rng = np.random.default_rng(n)
+    W = rng.random((n, n)) * rng.integers(1, 100)
+    p_np = max_weight_perfect_matching(W, use_scipy=False)
+    p_sp = max_weight_perfect_matching(W, use_scipy=True)
+    v_np = W[np.arange(n), p_np].sum()
+    v_sp = W[np.arange(n), p_sp].sum()
+    assert np.isclose(v_np, v_sp)
+
+
+def test_hungarian_negative_and_ties():
+    W = np.array([[1.0, 1.0], [1.0, -5.0]])
+    perm = max_weight_perfect_matching(W, use_scipy=False)
+    assert W[np.arange(2), perm].sum() == pytest.approx(2.0)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_node_coverage_constraint(seed):
+    """Every critical line must be matched through an uncovered support edge."""
+    rng = np.random.default_rng(seed)
+    n = 12
+    D = rng.random((n, n)) * (rng.random((n, n)) < 0.3)
+    if not (D > 0).any():
+        D[0, 0] = 1.0
+    S = D > 0
+    perm = mwm_node_coverage(D, S)  # raises internally if violated
+    crit_r, crit_c, k = critical_lines(S)
+    rows = np.arange(n)
+    on_support = S[rows, perm]
+    assert on_support[crit_r].all()
+
+
+def test_perm_matrix_roundtrip():
+    perm = np.array([2, 0, 1])
+    P = perm_matrix(perm)
+    assert P.sum() == 3
+    assert (P.argmax(axis=1) == perm).all()
+
+
+def test_empty_support_raises():
+    with pytest.raises(ValueError):
+        mwm_node_coverage(np.zeros((3, 3)), np.zeros((3, 3), bool))

@@ -1,0 +1,91 @@
+"""Hypothesis property-based tests for the SPECTRA system invariants.
+
+Invariants under test, for arbitrary nonnegative demand matrices, switch
+counts and reconfiguration delays:
+
+  I1  decompose() emits exactly degree(D) permutations and covers D.
+  I2  every pipeline's schedule covers D (Eq. 3), with nonnegative weights.
+  I3  makespan ≥ lower_bound(D, s, δ)   (§IV soundness).
+  I4  EQUALIZE never increases the makespan.
+  I5  SPECTRA++ is never worse than paper-faithful SPECTRA.
+  I6  the event-level simulator agrees with the analytic makespan.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    baseline_less,
+    decompose,
+    degree,
+    lower_bound,
+    spectra,
+    spectra_pp,
+)
+from repro.fabric.simulator import simulate
+
+
+@st.composite
+def demand_matrices(draw, max_n=10):
+    n = draw(st.integers(min_value=2, max_value=max_n))
+    density = draw(st.floats(min_value=0.1, max_value=1.0))
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    rng = np.random.default_rng(seed)
+    D = rng.random((n, n)) * (rng.random((n, n)) < density)
+    if not (D > 0).any():
+        D[rng.integers(n), rng.integers(n)] = rng.random() + 0.1
+    return D
+
+
+matrix_cases = st.tuples(
+    demand_matrices(),
+    st.integers(min_value=1, max_value=5),  # s
+    st.floats(min_value=1e-4, max_value=0.5),  # delta
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(demand_matrices())
+def test_i1_decompose_exact_and_covers(D):
+    dec = decompose(D)
+    assert dec.k == degree(D)
+    assert dec.covers(D)
+    assert all(a >= 0 for a in dec.alphas)
+
+
+@settings(max_examples=30, deadline=None)
+@given(matrix_cases)
+def test_i2_i3_i6_pipeline_invariants(case):
+    D, s, delta = case
+    res = spectra(D, s, delta)  # validate=True checks coverage (I2)
+    assert res.makespan >= res.lower_bound - 1e-9  # I3
+    rep = simulate(res.schedule, D)  # I6
+    assert rep.demand_met
+    assert abs(rep.finish_time - res.makespan) <= 1e-6 * max(1.0, res.makespan)
+
+
+@settings(max_examples=30, deadline=None)
+@given(matrix_cases)
+def test_i4_equalize_never_hurts(case):
+    D, s, delta = case
+    with_eq = spectra(D, s, delta, do_equalize=True).makespan
+    without = spectra(D, s, delta, do_equalize=False).makespan
+    assert with_eq <= without + 1e-9
+
+
+@settings(max_examples=25, deadline=None)
+@given(matrix_cases)
+def test_i5_spectra_pp_not_worse(case):
+    D, s, delta = case
+    base = spectra(D, s, delta).makespan
+    pp = spectra_pp(D, s, delta).makespan
+    assert pp <= base + 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(matrix_cases)
+def test_baseline_covers_and_bounded_below(case):
+    D, s, delta = case
+    sched = baseline_less(D, s, delta)
+    sched.validate(D)
+    assert sched.makespan() >= lower_bound(D, s, delta) - 1e-9

@@ -1,0 +1,125 @@
+"""SCHEDULE (LPT), EQUALIZE, improved schedulers, event simulator."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Decomposition,
+    decompose,
+    equalize,
+    local_search,
+    schedule_lpt,
+    schedule_wrap,
+    spectra,
+)
+from repro.fabric.simulator import simulate
+
+FIG2 = np.array([
+    [0.6, 0.3, 0, 0.1],
+    [0, 0.61, 0.39, 0],
+    [0, 0.09, 0.61, 0.3],
+    [0.4, 0, 0, 0.6],
+])
+
+
+def toy_dec(alphas):
+    n = len(alphas)
+    perms = [np.roll(np.arange(4), i % 4) for i in range(n)]
+    return Decomposition(perms=perms, alphas=list(alphas))
+
+
+def test_lpt_example_from_paper():
+    # α = (0.61, 0.3, 0.1), s=2, δ=0.01 → loads (0.62, 0.42), makespan 0.62.
+    dec = toy_dec([0.61, 0.3, 0.1])
+    sched = schedule_lpt(dec, 2, 0.01)
+    loads = sorted(sched.loads(), reverse=True)
+    assert loads == pytest.approx([0.62, 0.42])
+    assert sched.makespan() == pytest.approx(0.62)
+
+
+def test_equalize_example_from_paper():
+    dec = toy_dec([0.61, 0.3, 0.1])
+    sched = schedule_lpt(dec, 2, 0.01)
+    sched = equalize(sched)
+    # µ = (0.62 + 0.42 + 0.01)/2 = 0.525 on both switches.
+    assert sched.makespan() == pytest.approx(0.525)
+    assert sched.loads() == pytest.approx([0.525, 0.525])
+
+
+def test_equalize_never_increases_makespan():
+    rng = np.random.default_rng(0)
+    for s in (2, 3, 4, 8):
+        for _ in range(5):
+            dec = toy_dec(rng.random(rng.integers(1, 12)))
+            before = schedule_lpt(dec, s, 0.02)
+            m0 = before.makespan()
+            after = equalize(schedule_lpt(dec, s, 0.02))
+            assert after.makespan() <= m0 + 1e-12
+
+
+def test_equalize_preserves_coverage():
+    rng = np.random.default_rng(1)
+    D = rng.random((8, 8)) * (rng.random((8, 8)) < 0.4)
+    D[0, 0] = 1.0
+    res = spectra(D, 3, 0.01)  # validates internally
+    rep = simulate(res.schedule, D)
+    assert rep.demand_met
+
+
+def test_equalize_spread_within_delta_or_unsplittable():
+    dec = toy_dec([1.0, 0.9, 0.8, 0.2, 0.1])
+    delta = 0.01
+    sched = equalize(schedule_lpt(dec, 2, delta))
+    loads = sched.loads()
+    h_max, h_min = loads.argmax(), loads.argmin()
+    gap = loads[h_max] - loads[h_min]
+    longest = max(sched.switches[h_max].alphas)
+    needed = (gap - delta) / 2
+    assert gap <= delta + 1e-12 or longest <= needed + 1e-12
+
+
+def test_merge_aware_equalize_not_worse():
+    rng = np.random.default_rng(2)
+    for _ in range(5):
+        alphas = rng.random(10)
+        dec = toy_dec(alphas)
+        plain = equalize(schedule_lpt(dec, 4, 0.05)).makespan()
+        merged = equalize(schedule_lpt(dec, 4, 0.05), merge_aware=True).makespan()
+        assert merged <= plain + 1e-12
+
+
+def test_single_switch_schedule():
+    dec = toy_dec([0.5, 0.3])
+    sched = equalize(schedule_lpt(dec, 1, 0.1))
+    assert sched.makespan() == pytest.approx(0.5 + 0.3 + 0.2)
+
+
+def test_local_search_not_worse():
+    rng = np.random.default_rng(3)
+    for _ in range(5):
+        dec = toy_dec(rng.random(9))
+        base = schedule_lpt(dec, 3, 0.02)
+        m0 = base.makespan()
+        ls = local_search(schedule_lpt(dec, 3, 0.02))
+        assert ls.makespan() <= m0 + 1e-12
+
+
+def test_wrap_schedule_covers_and_bounded():
+    rng = np.random.default_rng(4)
+    D = rng.random((10, 10)) * (rng.random((10, 10)) < 0.5)
+    D[0, 1] = 2.0
+    dec = decompose(D)
+    sched = schedule_wrap(dec, 3, 0.05)
+    sched.validate(D)
+    total = sum(dec.alphas) + 0.05 * dec.k
+    assert sched.makespan() >= total / 3 - 1e-9
+
+
+def test_simulator_catches_shortfall():
+    dec = toy_dec([0.1])
+    sched = schedule_lpt(dec, 2, 0.01)
+    D = np.zeros((4, 4))
+    D[0, 0] = 5.0  # not covered
+    rep = simulate(sched, D)
+    assert not rep.demand_met
+    assert rep.max_shortfall > 4.0

@@ -1,0 +1,115 @@
+"""Traffic models, workload generators, and fabric normalization."""
+
+import numpy as np
+import pytest
+
+from repro.core import degree
+from repro.fabric.ocs import OCSFabric
+from repro.traffic.collectives import (
+    Placement,
+    TrafficModel,
+    add_noise,
+    normalize_max_line,
+    sinkhorn,
+)
+from repro.traffic.workloads import benchmark_workload, gpt3b_workload, moe_workload
+
+
+def test_ring_allreduce_bytes():
+    tm = TrafficModel(Placement(4, 1))
+    tm.ring_allreduce([0, 1, 2, 3], 8.0)
+    # each member sends 2*(g-1)/g*V = 12 bytes to its successor
+    assert tm.demand_bytes[0, 1] == pytest.approx(12.0)
+    assert tm.demand_bytes[3, 0] == pytest.approx(12.0)
+    assert tm.demand_bytes.sum() == pytest.approx(48.0)
+
+
+def test_allgather_half_of_allreduce():
+    tm1 = TrafficModel(Placement(4, 1))
+    tm1.ring_allgather([0, 1, 2, 3], 8.0)
+    tm2 = TrafficModel(Placement(4, 1))
+    tm2.ring_allreduce([0, 1, 2, 3], 8.0)
+    assert tm1.demand_bytes.sum() * 2 == pytest.approx(tm2.demand_bytes.sum())
+
+
+def test_all_to_all_uniform():
+    tm = TrafficModel(Placement(4, 1))
+    tm.all_to_all([0, 1, 2, 3], 16.0)
+    off_diag = tm.demand_bytes[~np.eye(4, dtype=bool)]
+    assert np.allclose(off_diag, 4.0)
+
+
+def test_intra_rack_traffic_excluded():
+    tm = TrafficModel(Placement(8, 4))  # 2 racks of 4 chips
+    tm.p2p(0, 1, 100.0)  # same rack → invisible to the optical core
+    tm.p2p(0, 5, 7.0)  # cross rack
+    assert tm.demand_bytes.sum() == pytest.approx(7.0)
+    assert tm.demand_bytes[0, 1] == pytest.approx(7.0)
+
+
+def test_sinkhorn_doubly_stochastic():
+    rng = np.random.default_rng(0)
+    D = rng.random((16, 16)) * (rng.random((16, 16)) < 0.4) + np.eye(16) * 0.1
+    S = sinkhorn(D)
+    assert np.allclose(S.sum(1), 1.0, atol=1e-6)
+    assert np.allclose(S.sum(0), 1.0, atol=1e-6)
+
+
+def test_gpt_workload_characteristics():
+    D = gpt3b_workload(rng=np.random.default_rng(0))
+    assert D.shape == (32, 32)
+    assert (D >= 0).all()
+    # quite sparse, doubly stochastic (±noise), strongly skewed
+    assert (D > 0).mean() < 0.5
+    assert np.allclose(D.sum(1), 1.0, atol=0.05)
+    nz = D[D > 0]
+    assert nz.max() / np.median(nz) > 3.0  # skew
+
+
+def test_moe_workload_characteristics():
+    D = moe_workload(rng=np.random.default_rng(0))
+    assert D.shape == (64, 64)
+    assert np.all(D.diagonal() == 0)  # local expert stays on-GPU
+    assert (D > 0).mean() > 0.9  # dense
+    assert max(D.sum(1).max(), D.sum(0).max()) <= 1.0 + 1e-9  # sub-stochastic
+    assert degree(D) >= 60
+
+
+def test_benchmark_workload_structure():
+    D = benchmark_workload(rng=np.random.default_rng(1))
+    assert D.shape == (100, 100)
+    assert degree(D) <= 16
+    # 70/30 split between 4 big and 12 small flows
+    assert D.sum() == pytest.approx(100.0, rel=0.05)
+
+
+def test_benchmark_degree_is_usually_m():
+    # Appendix: for n=100, k=16, P(degree=k) ≈ 1.
+    hits = sum(
+        degree(benchmark_workload(rng=np.random.default_rng(s), noise=0)) == 16
+        for s in range(5)
+    )
+    assert hits >= 4
+
+
+def test_ocs_fabric_seconds_conversion():
+    from repro.core import spectra
+
+    fabric = OCSFabric(num_switches=4, reconfig_delay_s=10e-6,
+                       link_bandwidth_Bps=50e9)
+    demand = np.zeros((8, 8))
+    demand[0, 1] = 500e9  # 500 GB must flow rack0→rack1
+    res, cct = fabric.schedule_bytes(demand)
+    # EQUALIZE spreads the one 500 GB element over all 4 parallel OCSes
+    # (each ToR has a link into every switch): 500GB/(4·50GB/s) + one δ.
+    assert cct == pytest.approx(500e9 / (4 * 50e9) + 10e-6, rel=1e-5)
+    assert res.makespan == pytest.approx(0.25 + 1e-6, rel=1e-5)
+
+
+def test_normalize_and_noise_helpers():
+    rng = np.random.default_rng(0)
+    D = rng.random((6, 6))
+    N = normalize_max_line(D)
+    assert max(N.sum(1).max(), N.sum(0).max()) == pytest.approx(1.0)
+    noisy = add_noise(N, 0.01, rng)
+    assert (noisy[N > 0] > 0).all()
