@@ -1,60 +1,59 @@
-"""Shared helpers for the paper-figure benchmarks."""
+"""Shared helpers for the paper-figure benchmarks.
+
+Algorithms are addressed by their ``repro.api`` registry names (plus the
+pseudo-solver ``"lb"`` for the §IV lower bound); ``sweep`` resolves names
+through the unified ``solve`` entry point, so there are no per-algorithm
+adapter functions here.
+"""
 
 from __future__ import annotations
 
 import csv
 import os
 import time
+import warnings
 from pathlib import Path
 
 import numpy as np
 
-from repro.core import baseline_less, eclipse_decompose, lower_bound, spectra, spectra_pp
+from repro.api import Problem, SolveOptions, solve
+from repro.core import lower_bound
 
 OUT_DIR = Path(__file__).resolve().parent / "out"
 FAST = os.environ.get("REPRO_BENCH_FAST", "0") == "1"
 DELTAS = np.array([1e-4, 3e-4, 1e-3, 3e-3, 1e-2, 3e-2, 1e-1])
 SEEDS = 3 if FAST else 8  # paper: 50 runs / datapoint
 
-
-def algo_spectra(D, s, delta):
-    return spectra(D, s, delta).makespan
-
-
-def algo_spectra_no_eq(D, s, delta):
-    return spectra(D, s, delta, do_equalize=False).makespan
+# Makespan sweeps don't need the lower bound attached to every report; the
+# "lb" column computes it directly.
+_SWEEP_OPTIONS = SolveOptions(compute_lb=False)
 
 
-def algo_spectra_pp(D, s, delta):
-    return spectra_pp(D, s, delta).makespan
-
-
-def algo_baseline(D, s, delta):
-    sched = baseline_less(D, s, delta)
-    sched.validate(D)
-    return sched.makespan()
-
-
-def algo_eclipse_variant(D, s, delta):
-    return spectra(
-        D, s, delta, decompose_fn=lambda M: eclipse_decompose(M, delta)
+def solver_fn(spec):
+    """Resolve a sweep column: registry solver name, ``"lb"``, or callable."""
+    if callable(spec):
+        return spec
+    if spec == "lb":
+        return lambda D, s, delta: lower_bound(D, s, delta)
+    return lambda D, s, delta, _name=spec: solve(
+        Problem(D, s, delta), solver=_name, options=_SWEEP_OPTIONS
     ).makespan
 
 
-def algo_lb(D, s, delta):
-    return lower_bound(D, s, delta)
-
-
 def sweep(workload_fn, algos, s_values, deltas=DELTAS, seeds=None):
-    """→ rows of dict(workload-ready) mean makespans over seeds."""
+    """→ rows of dict(workload-ready) mean makespans over seeds.
+
+    ``algos`` maps column name → registry solver name (or callable).
+    """
     seeds = SEEDS if seeds is None else seeds
+    fns = {name: solver_fn(spec) for name, spec in algos.items()}
     rows = []
     for s in s_values:
         for delta in deltas:
-            acc = {name: [] for name in algos}
+            acc = {name: [] for name in fns}
             for seed in range(seeds):
                 D = workload_fn(rng=np.random.default_rng(seed))
-                for name, fn in algos.items():
+                for name, fn in fns.items():
                     acc[name].append(fn(D, s, float(delta)))
             row = {"s": s, "delta": float(delta)}
             row.update({name: float(np.mean(v)) for name, v in acc.items()})
@@ -84,3 +83,28 @@ def timed(fn, *args, reps: int = 1, **kw):
         out = fn(*args, **kw)
     dt = (time.perf_counter() - t0) / reps
     return out, dt
+
+
+# Deprecation shims: the old per-algorithm adapters resolve through the
+# registry. Old call sites keep working; new code addresses solvers by name.
+_DEPRECATED_ALGOS = {
+    "algo_spectra": "spectra",
+    "algo_spectra_no_eq": "spectra_no_eq",
+    "algo_spectra_pp": "spectra_pp",
+    "algo_baseline": "baseline_less",
+    "algo_eclipse_variant": "spectra_eclipse",
+    "algo_lb": "lb",
+}
+
+
+def __getattr__(name: str):
+    if name in _DEPRECATED_ALGOS:
+        target = _DEPRECATED_ALGOS[name]
+        warnings.warn(
+            f"benchmarks.common.{name} is deprecated; use "
+            f'solver_fn("{target}") or repro.api.solve(..., solver="{target}")',
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return solver_fn(target)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

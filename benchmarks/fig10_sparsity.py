@@ -6,25 +6,15 @@ import functools
 
 import numpy as np
 
-from .common import (
-    OUT_DIR,
-    SEEDS,
-    algo_baseline,
-    algo_eclipse_variant,
-    algo_lb,
-    algo_spectra,
-    ratio,
-    timed,
-    write_csv,
-)
+from .common import OUT_DIR, SEEDS, ratio, solver_fn, timed, write_csv
 
 M_VALUES = (4, 8, 12, 16, 24, 32)
 DELTA = 0.04
 ALGOS = {
-    "spectra": algo_spectra,
-    "baseline": algo_baseline,
-    "spectra_eclipse": algo_eclipse_variant,
-    "lb": algo_lb,
+    "spectra": "spectra",
+    "baseline": "baseline_less",
+    "spectra_eclipse": "spectra_eclipse",
+    "lb": "lb",
 }
 
 
@@ -32,13 +22,14 @@ def _sweep_m(s: int):
     from repro.traffic.workloads import benchmark_workload
 
     rows = []
+    fns = {name: solver_fn(spec) for name, spec in ALGOS.items()}
     for m in M_VALUES:
         num_big = max(1, m // 4)
         wfn = functools.partial(benchmark_workload, m=m, num_big=num_big)
-        acc = {name: [] for name in ALGOS}
+        acc = {name: [] for name in fns}
         for seed in range(SEEDS):
             D = wfn(rng=np.random.default_rng(seed))
-            for name, fn in ALGOS.items():
+            for name, fn in fns.items():
                 acc[name].append(fn(D, s, DELTA))
         row = {"s": s, "m": m}
         row.update({k: float(np.mean(v)) for k, v in acc.items()})

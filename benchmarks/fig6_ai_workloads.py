@@ -7,23 +7,13 @@ worse than SPECTRA; SPECTRA tracks the lower bound.
 
 from __future__ import annotations
 
-from .common import (
-    OUT_DIR,
-    algo_baseline,
-    algo_eclipse_variant,
-    algo_lb,
-    algo_spectra,
-    ratio,
-    sweep,
-    timed,
-    write_csv,
-)
+from .common import OUT_DIR, ratio, sweep, timed, write_csv
 
 ALGOS = {
-    "spectra": algo_spectra,
-    "baseline": algo_baseline,
-    "spectra_eclipse": algo_eclipse_variant,
-    "lb": algo_lb,
+    "spectra": "spectra",
+    "baseline": "baseline_less",
+    "spectra_eclipse": "spectra_eclipse",
+    "lb": "lb",
 }
 
 

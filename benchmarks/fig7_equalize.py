@@ -6,9 +6,9 @@ be split), but not for the dense near-uniform MoE traffic.
 
 from __future__ import annotations
 
-from .common import OUT_DIR, algo_spectra, algo_spectra_no_eq, ratio, sweep, timed, write_csv
+from .common import OUT_DIR, ratio, sweep, timed, write_csv
 
-ALGOS = {"spectra": algo_spectra, "spectra_no_eq": algo_spectra_no_eq}
+ALGOS = {"spectra": "spectra", "spectra_no_eq": "spectra_no_eq"}
 
 
 def run():

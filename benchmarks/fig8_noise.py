@@ -4,9 +4,9 @@ from __future__ import annotations
 
 import functools
 
-from .common import OUT_DIR, algo_eclipse_variant, algo_spectra, ratio, sweep, timed, write_csv
+from .common import OUT_DIR, ratio, sweep, timed, write_csv
 
-ALGOS = {"spectra": algo_spectra, "spectra_eclipse": algo_eclipse_variant}
+ALGOS = {"spectra": "spectra", "spectra_eclipse": "spectra_eclipse"}
 
 
 def run():

@@ -28,7 +28,7 @@ def load_artifacts(mesh: str = "pod1") -> list[dict]:
 def run():
     import numpy as np
 
-    from repro.core import baseline_less
+    from repro.api import Problem, solve
     from repro.traffic.hlo_traffic import schedule_cell_demand
 
     arts = load_artifacts("pod1")
@@ -44,8 +44,12 @@ def run():
         cell = f"{art['arch']}×{art['shape']}"
         try:
             res, cct, D = schedule_cell_demand(art)
-            bl = baseline_less(D / max(D.max(), 1e-30), 4,
-                               res.schedule.delta).makespan()
+            # Registry path validates the BASELINE schedule (Eq. 3 coverage)
+            # like every other benchmark does.
+            bl = solve(
+                Problem(D / max(D.max(), 1e-30), 4, res.schedule.delta),
+                solver="baseline_less",
+            ).makespan
             ratio = bl / max(res.makespan, 1e-12)
             ocs = f"{cct*1e3:.2f}ms(x{ratio:.2f})"
         except Exception:

@@ -13,10 +13,11 @@ from .common import FAST, OUT_DIR, write_csv
 
 
 def run():
-    from repro.core import spectra
+    from repro.api import Problem, SolveOptions, solve
     from repro.traffic.workloads import benchmark_workload, gpt3b_workload, moe_workload
 
     reps = 3 if FAST else 10
+    opts = SolveOptions(validate=False, compute_lb=False)
     rows, out = [], []
     for wname, wfn, s in (
         ("gpt_s4", gpt3b_workload, 4),
@@ -27,7 +28,7 @@ def run():
         for seed in range(reps):
             D = wfn(rng=np.random.default_rng(seed))
             t0 = time.perf_counter()
-            spectra(D, s, 0.01, validate=False, compute_lb=False)
+            solve(Problem(D, s, 0.01), solver="spectra", options=opts)
             times.append(time.perf_counter() - t0)
         mean_ms = 1e3 * float(np.mean(times))
         p95_ms = 1e3 * float(np.percentile(times, 95))

@@ -14,8 +14,8 @@
 import jax
 import numpy as np
 
+from repro.api import Problem, solve
 from repro.configs.registry import ARCHS
-from repro.core import baseline_less, lower_bound, spectra
 from repro.data.pipeline import make_stream
 from repro.models.registry import build_model
 from repro.parallel.steps import make_train_step
@@ -39,22 +39,24 @@ print(f"expert token loads (E={len(load)}): {load.astype(int).tolist()}")
 D = _demand_from_stats(num_racks=8, metrics={"expert_load": load}, step=0)
 D = D / D.max()
 for s, delta in [(2, 0.01), (4, 0.01), (4, 0.05)]:
-    res = spectra(D, s, delta)
-    bl = baseline_less(D, s, delta)
+    p = Problem(D, s, delta)
+    res = solve(p, solver="spectra")
+    bl = solve(p, solver="baseline_less")
     print(f"  s={s} δ={delta}: SPECTRA {res.makespan:.4f} "
           f"(LB {res.lower_bound:.4f}, gap {res.optimality_gap:.3f}x) "
-          f"BASELINE {bl.makespan():.4f} "
-          f"→ {bl.makespan()/res.makespan:.2f}x longer")
+          f"BASELINE {bl.makespan:.4f} "
+          f"→ {bl.makespan/res.makespan:.2f}x longer")
 
 # ------------------------------------------------------------- paper-scale
 print("\n=== paper-scale 64×64 Qwen-MoE-like matrix (Fig. 6b setting) ===")
 D = moe_workload(rng=np.random.default_rng(0))
 for s in (2, 4):
     for delta in (1e-3, 1e-2, 1e-1):
-        res = spectra(D, s, delta)
-        bl = baseline_less(D, s, delta)
+        p = Problem(D, s, delta)
+        res = solve(p, solver="spectra")
+        bl = solve(p, solver="baseline_less")
         print(f"  s={s} δ={delta:g}: SPECTRA {res.makespan:.4f} "
-              f"LB {res.lower_bound:.4f} BASELINE {bl.makespan():.4f} "
-              f"({bl.makespan()/res.makespan:.2f}x)")
+              f"LB {res.lower_bound:.4f} BASELINE {bl.makespan:.4f} "
+              f"({bl.makespan/res.makespan:.2f}x)")
 print("\nNote how SPECTRA hugs the lower bound on dense MoE traffic — the "
       "paper's Fig. 6(b) observation.")

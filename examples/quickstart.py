@@ -5,16 +5,8 @@
 
 import numpy as np
 
-from repro.core import (
-    baseline_less,
-    decompose,
-    degree,
-    equalize,
-    lower_bound,
-    schedule_lpt,
-    spectra,
-    spectra_pp,
-)
+from repro.api import Problem, list_solvers, solve
+from repro.core import decompose, degree, equalize, lower_bound, schedule_lpt
 from repro.fabric.simulator import simulate
 
 # Fig. 2 demand matrix.
@@ -45,17 +37,18 @@ sched = equalize(sched)
 print(f"after EQUALIZE: loads = {np.round(sched.loads(), 4).tolist()} "
       f"makespan = {sched.makespan():.4f}\n")
 
-# One-call pipeline + lower bound + independent event-level validation.
-res = spectra(D, s, delta)
-rep = simulate(res.schedule, D)
-print(f"spectra():    makespan = {res.makespan:.4f}  "
+# Unified solver API: one input shape, one output shape, every algorithm.
+problem = Problem(D, s, delta)
+res = solve(problem, solver="spectra")
+rep = simulate(res, D)  # independent event-level validation
+print(f'solve(problem, solver="spectra"): makespan = {res.makespan:.4f}  '
       f"LB = {res.lower_bound:.4f}  gap = {res.optimality_gap:.3f}x  "
       f"(simulated: served={rep.demand_met})")
 
-# Comparisons on this matrix.
-bl = baseline_less(D, s, delta)
-bl.validate(D)
-pp = spectra_pp(D, s, delta)
-print(f"BASELINE (LESS-style split): {bl.makespan():.4f}")
-print(f"SPECTRA++ (beyond-paper):    {pp.makespan:.4f}")
-print(f"lower bound:                 {lower_bound(D, s, delta):.4f}")
+# Every registered solver answers the same problem in the same shape.
+print(f"\nall registered solvers on this matrix (LB = "
+      f"{lower_bound(D, s, delta):.4f}):")
+for name in list_solvers():
+    r = solve(problem, solver=name)
+    print(f"  {name:16s} [{r.backend:5s}] makespan = {r.makespan:.4f}  "
+          f"configs = {r.num_configs}")

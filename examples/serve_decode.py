@@ -1,4 +1,6 @@
-"""Batched serving demo: KV-cache decode across architecture families.
+"""Batched serving demo: KV-cache decode across architecture families,
+plus the OCS SolverService draining scheduling requests through the
+unified solver API.
 
     PYTHONPATH=src python examples/serve_decode.py
 """
@@ -10,7 +12,7 @@ import numpy as np
 
 from repro.configs.registry import ARCHS
 from repro.models.registry import build_model
-from repro.serve.engine import DecodeEngine
+from repro.serve.engine import DecodeEngine, SolverService
 
 for arch in ("granite-3-8b", "mamba2-2.7b", "zamba2-1.2b"):
     cfg = ARCHS[arch].reduced()
@@ -27,3 +29,19 @@ for arch in ("granite-3-8b", "mamba2-2.7b", "zamba2-1.2b"):
     n = 4 * 48
     print(f"{arch:>16} (reduced): {n} tokens in {dt:.2f}s → "
           f"{n/dt:6.1f} tok/s | sample: {res.tokens[0, 16:24].tolist()}")
+
+# While tokens stream out, the fabric controller serves scheduling requests:
+# one demand matrix per pod per period, drained in batches.
+from repro.traffic.workloads import moe_workload  # noqa: E402
+
+svc = SolverService(s=4, delta=0.01, solver="spectra")
+tickets = [
+    svc.submit(moe_workload(rng=np.random.default_rng(seed)) / 64)
+    for seed in range(3)
+]
+reports = svc.flush()
+print("\nSolverService (one controller period, 3 pods):")
+for t in tickets:
+    r = reports[t]
+    print(f"  pod {t}: makespan {r.makespan:.4f}  gap {r.optimality_gap:.3f}x "
+          f"({r.num_configs} circuits, {r.solver}/{r.backend})")

@@ -1,0 +1,34 @@
+"""Unified solver API: one input shape, one output shape, every algorithm.
+
+    from repro.api import Problem, solve, solve_many
+
+    report = solve(Problem(D, s=4, delta=0.01), solver="spectra")
+    reports = solve_many(Ds, s=4, delta=0.01, solver="spectra_jax")
+
+See ``registry`` for the built-in solver names, ``pipeline`` for the
+declarative stage system, and ``batch`` for batched/multiprocess solving.
+"""
+
+from .batch import solve_many
+from .pipeline import (
+    DECOMPOSERS,
+    EQUALIZERS,
+    SCHEDULERS,
+    Pipeline,
+    register_stage,
+)
+from .problem import Problem, SolveOptions, SolveReport
+from .registry import (
+    get_solver,
+    list_solvers,
+    register_solver,
+    solve,
+    solve_all,
+)
+
+__all__ = [
+    "DECOMPOSERS", "EQUALIZERS", "SCHEDULERS",
+    "Pipeline", "Problem", "SolveOptions", "SolveReport",
+    "get_solver", "list_solvers", "register_solver", "register_stage",
+    "solve", "solve_all", "solve_many",
+]

@@ -1,0 +1,83 @@
+"""Batched solving: many demand matrices through one entry point.
+
+``solve_many`` is how a production controller consumes the API: every
+controller period it holds one demand matrix per pod/job and wants them all
+scheduled at once. On the JAX backend (``solver="spectra_jax"``) the whole
+stack is decomposed in a single vmapped device call (host-side EQUALIZE per
+instance); on the numpy backends it falls back to a per-instance loop,
+optionally fanned out over worker processes.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .problem import Problem, SolveOptions, SolveReport
+from .registry import solve
+
+
+def _as_stack(Ds) -> tuple[list[np.ndarray], bool]:
+    """Normalize to a list of square matrices; report whether shapes match."""
+    if isinstance(Ds, np.ndarray) and Ds.ndim == 3:
+        mats = [Ds[b] for b in range(Ds.shape[0])]
+    else:
+        mats = [np.asarray(D) for D in Ds]
+    if not mats:
+        return [], True
+    uniform = all(D.shape == mats[0].shape for D in mats)
+    return mats, uniform
+
+
+def _solve_one(args) -> SolveReport:
+    D, s, delta, solver, options = args
+    return solve(Problem(D, s, delta), solver=solver, options=options)
+
+
+def solve_many(
+    Ds,
+    s: int,
+    delta: float,
+    *,
+    solver: str = "spectra",
+    options: SolveOptions | None = None,
+    processes: int | None = None,
+) -> list[SolveReport]:
+    """Solve a batch of demand matrices; one SolveReport per instance.
+
+    Ds may be a stacked ``(B, n, n)`` array or a sequence of square
+    matrices. ``solver="spectra_jax"`` with uniform shapes runs one vmapped
+    device decomposition for the whole batch; every other case loops,
+    across ``processes`` workers when given. Worker processes start via
+    forkserver/spawn once jax is loaded, so scripts using ``processes``
+    need the standard ``if __name__ == "__main__":`` guard.
+    """
+    options = options or SolveOptions()
+    mats, uniform = _as_stack(Ds)
+    if not mats:
+        return []
+    if solver == "spectra_jax" and uniform:
+        try:
+            from .jax_backend import solve_many_jax
+        except Exception:  # pragma: no cover - jax missing
+            pass
+        else:
+            return solve_many_jax(np.stack(mats), s, delta, options)
+    work = [(D, s, delta, solver, options) for D in mats]
+    if processes and processes > 1 and len(work) > 1:
+        import multiprocessing as mp
+        import sys
+
+        # Forking a process with live XLA threads can deadlock (JAX warns on
+        # os.fork()), and importing repro.api pulls jax in — so fork only
+        # when jax never loaded; otherwise use forkserver (workers fork from
+        # a clean server process), falling back to spawn.
+        methods = mp.get_all_start_methods()
+        if "jax" not in sys.modules and "fork" in methods:
+            method = "fork"
+        elif "forkserver" in methods:
+            method = "forkserver"
+        else:
+            method = "spawn"
+        with mp.get_context(method).Pool(min(processes, len(work))) as pool:
+            return pool.map(_solve_one, work)
+    return [_solve_one(w) for w in work]

@@ -1,0 +1,125 @@
+"""Composable DECOMPOSE → SCHEDULE → EQUALIZE pipelines (declarative stages).
+
+A ``Pipeline`` names its three stages instead of closing over functions, so
+variants like "SPECTRA (ECLIPSE)" or the wrap-around scheduler are data::
+
+    Pipeline()                                  # paper-faithful SPECTRA
+    Pipeline(equalize="none")                   # SPECTRA w/o EQUALIZE
+    Pipeline(decompose="eclipse")               # SPECTRA (ECLIPSE)
+    Pipeline(schedule="wrap", equalize="none")  # wrap-around scheduler
+
+Each stage is looked up in a registry (``DECOMPOSERS`` / ``SCHEDULERS`` /
+``EQUALIZERS``); ``register_stage`` adds new ones without touching this
+module.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Mapping
+
+from ..core.baselines import eclipse_decompose
+from ..core.decompose import Decomposition, decompose
+from ..core.equalize import equalize
+from ..core.improved import local_search, schedule_wrap
+from ..core.schedule import ParallelSchedule, schedule_lpt
+from .problem import Problem, SolveOptions, SolveReport, finish_report
+
+# Stage signatures. Every stage sees the Problem so stage functions can use
+# s / delta without closures (ECLIPSE's decomposition needs delta, say).
+DecomposeFn = Callable[..., Decomposition]        # (problem, **kw) -> dec
+ScheduleFn = Callable[..., ParallelSchedule]      # (dec, problem, **kw) -> sched
+EqualizeFn = Callable[..., ParallelSchedule]      # (sched, problem, **kw) -> sched
+
+DECOMPOSERS: dict[str, DecomposeFn] = {
+    "spectra": lambda problem, **kw: decompose(problem.D, **kw),
+    "eclipse": lambda problem, **kw: eclipse_decompose(problem.D, problem.delta, **kw),
+}
+
+SCHEDULERS: dict[str, ScheduleFn] = {
+    "lpt": lambda dec, problem, **kw: schedule_lpt(dec, problem.s, problem.delta),
+    "lpt_local_search": lambda dec, problem, **kw: local_search(
+        schedule_lpt(dec, problem.s, problem.delta), **kw
+    ),
+    "wrap": lambda dec, problem, **kw: schedule_wrap(
+        dec, problem.s, problem.delta, **kw
+    ),
+}
+
+EQUALIZERS: dict[str, EqualizeFn] = {
+    "none": lambda sched, problem, **kw: sched,
+    "standard": lambda sched, problem, **kw: equalize(sched, **kw),
+    "merge_aware": lambda sched, problem, **kw: equalize(
+        sched, merge_aware=True, **kw
+    ),
+}
+
+_STAGE_TABLES = {
+    "decompose": DECOMPOSERS,
+    "schedule": SCHEDULERS,
+    "equalize": EQUALIZERS,
+}
+
+
+def register_stage(kind: str, name: str, fn: Callable, *, overwrite: bool = False) -> None:
+    """Add a named stage implementation (kind ∈ decompose/schedule/equalize)."""
+    try:
+        table = _STAGE_TABLES[kind]
+    except KeyError:
+        raise ValueError(
+            f"unknown stage kind {kind!r}; expected one of {sorted(_STAGE_TABLES)}"
+        ) from None
+    if name in table and not overwrite:
+        raise ValueError(f"{kind} stage {name!r} already registered")
+    table[name] = fn
+
+
+def _lookup(kind: str, name: str) -> Callable:
+    table = _STAGE_TABLES[kind]
+    if name not in table:
+        raise KeyError(
+            f"unknown {kind} stage {name!r}; available: {sorted(table)}"
+        )
+    return table[name]
+
+
+@dataclass(frozen=True)
+class Pipeline:
+    """Declarative three-stage solver; callable as ``pipeline(problem, options)``."""
+
+    decompose: str = "spectra"
+    schedule: str = "lpt"
+    equalize: str = "standard"
+    decompose_kwargs: Mapping[str, Any] = field(default_factory=dict)
+    schedule_kwargs: Mapping[str, Any] = field(default_factory=dict)
+    equalize_kwargs: Mapping[str, Any] = field(default_factory=dict)
+
+    def describe(self) -> str:
+        return f"{self.decompose} → {self.schedule} → {self.equalize}"
+
+    def __call__(
+        self,
+        problem: Problem,
+        options: SolveOptions = SolveOptions(),
+        *,
+        solver_name: str | None = None,
+    ) -> SolveReport:
+        dec_fn = _lookup("decompose", self.decompose)
+        sched_fn = _lookup("schedule", self.schedule)
+        eq_fn = _lookup("equalize", self.equalize)
+        t0 = time.perf_counter()
+        dec = dec_fn(problem, **dict(self.decompose_kwargs))
+        sched = sched_fn(dec, problem, **dict(self.schedule_kwargs))
+        sched = eq_fn(sched, problem, **dict(self.equalize_kwargs))
+        runtime = time.perf_counter() - t0
+        return finish_report(
+            solver=solver_name or self.describe(),
+            backend="numpy",
+            schedule=sched,
+            problem=problem,
+            options=options,
+            runtime_s=runtime,
+            decomposition=dec,
+            extras={"pipeline": self.describe()},
+        )

@@ -1,0 +1,140 @@
+"""String-addressable solver registry: ``solve(problem, solver="spectra")``.
+
+Built-in solvers (see README for the table):
+
+    spectra          paper-faithful DECOMPOSE → LPT → EQUALIZE
+    spectra_no_eq    same, without the EQUALIZE step (Fig. 7 ablation)
+    spectra_pp       beyond-paper best-of ensemble (SPECTRA++)
+    spectra_eclipse  ECLIPSE decomposition + our SCHEDULE/EQUALIZE
+    baseline_less    LESS-style split-then-schedule comparison baseline
+    spectra_jax      on-device DECOMPOSE+LPT (JAX), host-side EQUALIZE
+
+A solver is any callable ``(Problem, SolveOptions) -> SolveReport``;
+``Pipeline`` instances qualify. Register your own with ``register_solver``.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Iterable
+
+import numpy as np
+
+from ..core.baselines import baseline_less as _baseline_less
+from ..core.improved import spectra_pp as _spectra_pp
+from .pipeline import Pipeline
+from .problem import Problem, SolveOptions, SolveReport, finish_report
+
+SolverFn = Callable[[Problem, SolveOptions], SolveReport]
+
+_SOLVERS: dict[str, SolverFn] = {}
+
+
+def register_solver(
+    name: str, fn: SolverFn | None = None, *, overwrite: bool = False
+):
+    """Register a solver under ``name``; usable as a decorator."""
+
+    def _register(f: SolverFn) -> SolverFn:
+        if name in _SOLVERS and not overwrite:
+            raise ValueError(f"solver {name!r} already registered")
+        _SOLVERS[name] = f
+        return f
+
+    return _register if fn is None else _register(fn)
+
+
+def get_solver(name: str) -> SolverFn:
+    if name not in _SOLVERS:
+        raise KeyError(f"unknown solver {name!r}; available: {list_solvers()}")
+    return _SOLVERS[name]
+
+
+def list_solvers() -> list[str]:
+    return sorted(_SOLVERS)
+
+
+def solve(
+    problem: Problem,
+    *,
+    solver: str = "spectra",
+    options: SolveOptions | None = None,
+) -> SolveReport:
+    """Run one registered solver on one problem; uniform SolveReport out."""
+    fn = get_solver(solver)
+    report = fn(problem, options or SolveOptions())
+    report.solver = solver
+    return report
+
+
+# ---------------------------------------------------------------------------
+# Built-in registrations.
+# ---------------------------------------------------------------------------
+
+def _pipeline_solver(name: str, pipeline: Pipeline) -> None:
+    register_solver(
+        name, lambda problem, options, _p=pipeline: _p(problem, options)
+    )
+
+
+_pipeline_solver("spectra", Pipeline())
+_pipeline_solver("spectra_no_eq", Pipeline(equalize="none"))
+_pipeline_solver("spectra_eclipse", Pipeline(decompose="eclipse"))
+
+
+@register_solver("spectra_pp")
+def _solve_spectra_pp(problem: Problem, options: SolveOptions) -> SolveReport:
+    # Validation/LB go through finish_report so SolveOptions (validate_tol,
+    # compute_lb) behave exactly as on every other solver.
+    res = _spectra_pp(
+        problem.D, problem.s, problem.delta, validate=False, compute_lb=False
+    )
+    return finish_report(
+        solver="spectra_pp",
+        backend="numpy",
+        schedule=res.schedule,
+        problem=problem,
+        options=options,
+        runtime_s=res.runtime_s,
+        decomposition=res.decomposition,
+    )
+
+
+@register_solver("baseline_less")
+def _solve_baseline_less(problem: Problem, options: SolveOptions) -> SolveReport:
+    D = np.asarray(problem.D, dtype=np.float64)
+    t0 = time.perf_counter()
+    sched = _baseline_less(D, problem.s, problem.delta)
+    runtime = time.perf_counter() - t0
+    return finish_report(
+        solver="baseline_less",
+        backend="numpy",
+        schedule=sched,
+        problem=problem,
+        options=options,
+        runtime_s=runtime,
+    )
+
+
+def _register_jax_solver() -> None:
+    try:
+        from .jax_backend import solve_spectra_jax
+    except Exception:  # pragma: no cover - jax missing: numpy API still works
+        return
+    register_solver("spectra_jax", solve_spectra_jax)
+
+
+_register_jax_solver()
+
+
+def solve_all(
+    problem: Problem,
+    *,
+    solvers: Iterable[str] | None = None,
+    options: SolveOptions | None = None,
+) -> dict[str, SolveReport]:
+    """Run several solvers on the same problem (benchmark convenience)."""
+    return {
+        name: solve(problem, solver=name, options=options)
+        for name in (solvers or list_solvers())
+    }

@@ -1,11 +1,20 @@
 """SPECTRA core: the paper's contribution (DECOMPOSE / SCHEDULE / EQUALIZE).
 
-Public API:
+Preferred entry point — the unified solver API (re-exported here)::
+
+    from repro.core import Problem, solve
+    report = solve(Problem(D, s, delta), solver="spectra")
+
+Stage-level names:
     spectra, spectra_pp        — full pipelines (paper-faithful / improved)
     decompose, Decomposition   — Alg. 1 + REFINE (Alg. 2)
     schedule_lpt, equalize     — Alg. 3, Alg. 4
     lower_bound                — §IV Theorems 1-2 + Property 2
     baseline_less, eclipse_decompose — §V comparison algorithms
+
+The direct pipeline entry points (``spectra``/``spectra_pp``/…) remain the
+underlying implementations and keep working; new code should address
+algorithms by registry name through ``solve``/``solve_many``.
 """
 
 from .baselines import baseline_less, eclipse_decompose, less_split
@@ -22,6 +31,14 @@ from .improved import local_search, schedule_wrap, spectra_pp
 from .schedule import ParallelSchedule, SwitchSchedule, schedule_lpt
 from .spectra import SpectraResult, spectra
 
+# Unified solver API re-exports, resolved lazily to avoid the import cycle
+# (repro.api's stage tables import the implementations defined above).
+_API_NAMES = (
+    "Pipeline", "Problem", "SolveOptions", "SolveReport", "get_solver",
+    "list_solvers", "register_solver", "register_stage", "solve",
+    "solve_all", "solve_many",
+)
+
 __all__ = [
     "Decomposition", "ParallelSchedule", "SpectraResult", "SwitchSchedule",
     "baseline_less", "decompose", "degree", "eclipse_decompose", "equalize",
@@ -29,4 +46,13 @@ __all__ = [
     "local_search", "lower_bound", "max_weight_perfect_matching",
     "mwm_node_coverage", "perm_matrix", "refine_greedy", "refine_lp",
     "refine_signed", "schedule_lpt", "schedule_wrap", "spectra", "spectra_pp",
+    *_API_NAMES,
 ]
+
+
+def __getattr__(name: str):
+    if name in _API_NAMES:
+        from .. import api
+
+        return getattr(api, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

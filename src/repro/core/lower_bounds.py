@@ -16,6 +16,13 @@ from __future__ import annotations
 import numpy as np
 
 
+def optimality_gap(makespan: float, lower_bound: float) -> float:
+    """makespan / lower_bound; 1.0 for the degenerate 0/0 (empty demand)."""
+    if lower_bound <= 0:
+        return 1.0 if makespan <= 0 else float("inf")
+    return makespan / lower_bound
+
+
 def lb_theorem1(w: float, k: int, s: int, delta: float) -> float:
     return (w + delta * max(k, s)) / s
 

@@ -14,7 +14,7 @@ import numpy as np
 
 from .decompose import Decomposition, decompose
 from .equalize import equalize
-from .lower_bounds import lower_bound
+from .lower_bounds import lower_bound, optimality_gap
 from .schedule import ParallelSchedule, schedule_lpt
 
 
@@ -28,9 +28,7 @@ class SpectraResult:
 
     @property
     def optimality_gap(self) -> float:
-        if self.lower_bound <= 0:
-            return float("inf")
-        return self.makespan / self.lower_bound
+        return optimality_gap(self.makespan, self.lower_bound)
 
 
 def spectra(

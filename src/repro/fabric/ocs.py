@@ -14,7 +14,7 @@ from typing import Callable
 
 import numpy as np
 
-from ..core.spectra import SpectraResult, spectra
+from ..core.spectra import SpectraResult
 
 
 @dataclass(frozen=True)
@@ -43,13 +43,39 @@ class OCSFabric:
     def schedule_bytes(
         self,
         demand_bytes: np.ndarray,
-        scheduler: Callable[..., SpectraResult] = spectra,
+        scheduler: str | Callable[..., SpectraResult] = "spectra",
         **kw,
     ) -> tuple[SpectraResult, float]:
-        """Schedule a byte-demand matrix; returns (result, CCT seconds)."""
+        """Schedule a byte-demand matrix; returns (result, CCT seconds).
+
+        ``scheduler`` is a ``repro.api`` registry solver name (preferred) or
+        a legacy callable ``(D, s, delta, **kw) -> SpectraResult``-like. On
+        the registry path, pass ``options=SolveOptions(...)`` — or legacy
+        kwargs like ``validate=False`` / ``compute_lb=False``, which are
+        mapped onto SolveOptions (anything else lands in ``extra``).
+        """
         D, unit_s = self.normalize(demand_bytes)
-        if unit_s == 0.0:
-            res = scheduler(D, self.num_switches, 0.0, **kw)
-            return res, 0.0
-        res = scheduler(D, self.num_switches, self.delta_units(unit_s), **kw)
-        return res, res.makespan * unit_s
+        delta = self.delta_units(unit_s) if unit_s > 0.0 else 0.0
+        if callable(scheduler):
+            res = scheduler(D, self.num_switches, delta, **kw)
+        else:
+            from ..api import Problem, SolveOptions, solve
+
+            options = kw.pop("options", None)
+            if options is None:
+                options = SolveOptions(
+                    validate=kw.pop("validate", True),
+                    compute_lb=kw.pop("compute_lb", True),
+                    validate_tol=kw.pop("validate_tol", None),
+                    extra=kw,
+                )
+            elif kw:
+                raise TypeError(
+                    f"pass either options= or legacy kwargs, not both: {sorted(kw)}"
+                )
+            res = solve(
+                Problem(D, self.num_switches, delta),
+                solver=scheduler,
+                options=options,
+            )
+        return res, (res.makespan * unit_s if unit_s > 0.0 else 0.0)

@@ -24,7 +24,12 @@ class SimReport:
     max_shortfall: float
 
 
-def simulate(sched: ParallelSchedule, D: np.ndarray, tol: float = 1e-9) -> SimReport:
+def simulate(sched, D: np.ndarray, tol: float = 1e-9) -> SimReport:
+    """Accepts a ParallelSchedule, or anything carrying one under
+    ``.schedule`` (``repro.api.SolveReport``, ``SpectraResult``)."""
+    sched = getattr(sched, "schedule", sched)
+    if not isinstance(sched, ParallelSchedule):
+        raise TypeError(f"cannot simulate {type(sched).__name__}")
     D = np.asarray(D, dtype=np.float64)
     n = D.shape[0]
     rows = np.arange(n)

@@ -1,20 +1,28 @@
-"""Batched decode engine over the model zoo's cache machinery.
+"""Serving engines: batched LLM decode + batched OCS solver service.
 
-Fixed-slot batched serving: a batch of same-length prompts is prefilled by
-cache replay (decode_step per position — simple and correct; a production
-server would add a fused prefill that emits the KV cache directly, noted
-in EXPERIMENTS.md §Perf), then greedy/temperature decoding for
-``max_new_tokens``. All steps run under a single jitted serve_step with a
-donated cache.
+``DecodeEngine`` — fixed-slot batched LLM serving: a batch of same-length
+prompts is prefilled by cache replay (decode_step per position — simple and
+correct; a production server would add a fused prefill that emits the KV
+cache directly, noted in EXPERIMENTS.md §Perf), then greedy/temperature
+decoding for ``max_new_tokens``. All steps run under a single jitted
+serve_step with a donated cache.
+
+``SolverService`` — the scheduling half of the serving story: clients submit
+demand matrices (one per pod/job per controller period), the service groups
+same-shape instances and drains them through the unified
+``repro.api.solve_many`` — one vmapped device call per group on the JAX
+backend, a (optionally multiprocess) loop otherwise.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from ..api import SolveOptions, SolveReport, solve_many
 
 
 @dataclass
@@ -69,3 +77,64 @@ class DecodeEngine:
         tokens = np.asarray(jnp.concatenate(out, axis=1))
         return GenerationResult(tokens=tokens, prompt_len=S0,
                                 steps=S0 + max_new_tokens)
+
+
+@dataclass
+class SolverService:
+    """Queue-and-drain scheduling service over the unified solver API.
+
+    ``submit`` enqueues a demand matrix and returns a ticket; ``flush``
+    solves everything queued — batching same-shape matrices into one
+    ``solve_many`` call each — and returns ``{ticket: SolveReport}``.
+    """
+
+    s: int
+    delta: float
+    solver: str = "spectra"
+    options: SolveOptions = field(default_factory=SolveOptions)
+    processes: int | None = None
+
+    def __post_init__(self) -> None:
+        self._queue: list[tuple[int, np.ndarray]] = []
+        self._next_ticket = 0
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    def submit(self, D: np.ndarray) -> int:
+        D = np.asarray(D, dtype=np.float64)
+        if D.ndim != 2 or D.shape[0] != D.shape[1]:
+            raise ValueError(f"demand matrix must be square, got {D.shape}")
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self._queue.append((ticket, D))
+        return ticket
+
+    def flush(self) -> dict[int, SolveReport]:
+        if not self._queue:
+            return {}
+        groups: dict[tuple[int, ...], list[tuple[int, np.ndarray]]] = {}
+        for ticket, D in self._queue:
+            groups.setdefault(D.shape, []).append((ticket, D))
+        pending, self._queue = self._queue, []
+        out: dict[int, SolveReport] = {}
+        try:
+            for batch in groups.values():
+                reports = solve_many(
+                    [D for _, D in batch],
+                    self.s,
+                    self.delta,
+                    solver=self.solver,
+                    options=self.options,
+                    processes=self.processes,
+                )
+                for (ticket, _), rep in zip(batch, reports):
+                    out[ticket] = rep
+        except Exception:
+            # One bad matrix must not drop the other pods' requests: put
+            # every unresolved submission back on the queue before raising.
+            self._queue = [
+                (t, D) for t, D in pending if t not in out
+            ] + self._queue
+            raise
+        return out

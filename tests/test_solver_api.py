@@ -1,0 +1,174 @@
+"""Unified solver API: registry, pipelines, batched solve, serving service.
+
+Coverage contract (ISSUE 1):
+  * every registered solver round-trips through the event-level simulator
+    on random doubly-substochastic demand matrices;
+  * batched JAX ``solve_many`` agrees with per-instance ``solve`` makespans
+    within 1e-4 relative tolerance over a batch of ≥ 8 matrices.
+"""
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    Pipeline,
+    Problem,
+    SolveOptions,
+    SolveReport,
+    list_solvers,
+    register_solver,
+    solve,
+    solve_many,
+)
+from repro.fabric.simulator import simulate
+
+EXPECTED_SOLVERS = {
+    "spectra",
+    "spectra_no_eq",
+    "spectra_pp",
+    "spectra_eclipse",
+    "baseline_less",
+    "spectra_jax",
+}
+
+
+def doubly_substochastic(rng, n, density=0.5):
+    """Random D with every row/column sum ≤ 1 (scaled by the max line sum)."""
+    D = rng.random((n, n)) * (rng.random((n, n)) < density)
+    if not (D > 0).any():
+        D[rng.integers(n), rng.integers(n)] = 0.5
+    T = max(D.sum(axis=0).max(), D.sum(axis=1).max())
+    return D / (T * (1.0 + 0.1 * rng.random()))
+
+
+def test_registry_lists_all_builtin_solvers():
+    assert EXPECTED_SOLVERS <= set(list_solvers())
+
+
+@pytest.mark.parametrize("solver", sorted(EXPECTED_SOLVERS))
+@pytest.mark.parametrize("seed", [0, 1])
+def test_every_solver_roundtrips_through_simulator(solver, seed):
+    rng = np.random.default_rng(seed)
+    D = doubly_substochastic(rng, 10)
+    problem = Problem(D, s=3, delta=0.01)
+    report = solve(problem, solver=solver)
+    # Uniform report shape.
+    assert isinstance(report, SolveReport)
+    assert report.solver == solver
+    assert report.backend == ("jax" if solver == "spectra_jax" else "numpy")
+    assert report.validated
+    assert report.num_configs == report.schedule.num_configs()
+    assert np.isfinite(report.makespan) and report.runtime_s >= 0
+    # Makespan is sound vs the §IV lower bound (float32 slack for jax).
+    assert report.makespan >= report.lower_bound - 1e-3
+    # Event-level replay serves all demand at the claimed makespan.
+    tol = 1e-4 if report.backend == "jax" else 1e-9
+    sim = simulate(report, D, tol=tol)
+    assert sim.demand_met
+    assert sim.finish_time == pytest.approx(report.makespan, rel=1e-6)
+
+
+def test_solve_many_jax_matches_per_instance():
+    rng = np.random.default_rng(7)
+    Ds = np.stack([doubly_substochastic(rng, 8) for _ in range(8)])
+    batched = solve_many(Ds, 2, 0.02, solver="spectra_jax")
+    assert len(batched) == 8
+    for b, rep in enumerate(batched):
+        single = solve(Problem(Ds[b], 2, 0.02), solver="spectra_jax")
+        rel = abs(rep.makespan - single.makespan) / max(single.makespan, 1e-12)
+        assert rel < 1e-4
+        assert rep.extras["batched"] and rep.extras["batch_size"] == 8
+
+
+def test_solve_many_numpy_loop_and_ragged_shapes():
+    rng = np.random.default_rng(3)
+    Ds = [doubly_substochastic(rng, n) for n in (6, 9, 6)]  # ragged is fine
+    reports = solve_many(Ds, 2, 0.01, solver="spectra")
+    singles = [solve(Problem(D, 2, 0.01), solver="spectra") for D in Ds]
+    for rep, single in zip(reports, singles):
+        assert rep.makespan == pytest.approx(single.makespan, rel=1e-12)
+
+
+def test_solve_many_multiprocess_matches_serial():
+    rng = np.random.default_rng(4)
+    Ds = [doubly_substochastic(rng, 7) for _ in range(4)]
+    serial = solve_many(Ds, 2, 0.01, solver="baseline_less")
+    parallel = solve_many(Ds, 2, 0.01, solver="baseline_less", processes=2)
+    assert [r.makespan for r in parallel] == pytest.approx(
+        [r.makespan for r in serial]
+    )
+
+
+def test_declarative_pipeline_matches_registered_variant():
+    rng = np.random.default_rng(5)
+    D = doubly_substochastic(rng, 8)
+    problem = Problem(D, 2, 0.01)
+    via_registry = solve(problem, solver="spectra_eclipse")
+    via_pipeline = Pipeline(decompose="eclipse")(problem)
+    assert via_pipeline.makespan == pytest.approx(via_registry.makespan)
+    # Wrap-around scheduling is a stage config, not a closure.
+    wrapped = Pipeline(schedule="wrap", equalize="none")(problem)
+    simulate(wrapped, D)
+
+
+def test_register_solver_extension_and_duplicate_rejection():
+    name = "_test_identity_solver"
+    if name not in list_solvers():
+        register_solver(name, Pipeline(equalize="none"))
+    rng = np.random.default_rng(6)
+    D = doubly_substochastic(rng, 6)
+    rep = solve(Problem(D, 2, 0.01), solver=name)
+    assert rep.solver == name
+    with pytest.raises(ValueError):
+        register_solver(name, Pipeline())
+    with pytest.raises(KeyError):
+        solve(Problem(D, 2, 0.01), solver="no_such_solver")
+
+
+def test_options_control_validation_and_lb():
+    rng = np.random.default_rng(8)
+    D = doubly_substochastic(rng, 8)
+    rep = solve(
+        Problem(D, 2, 0.01),
+        solver="spectra",
+        options=SolveOptions(validate=False, compute_lb=False),
+    )
+    assert not rep.validated
+    assert np.isnan(rep.lower_bound)
+
+
+def test_optimality_gap_degenerate_zero_demand():
+    from repro.core import spectra
+
+    rep = solve(Problem(np.zeros((4, 4)), 2, 0.01), solver="spectra")
+    assert rep.makespan == 0.0
+    assert rep.optimality_gap == 1.0
+    assert spectra(np.zeros((4, 4)), 2, 0.01).optimality_gap == 1.0
+
+
+def test_solver_service_batches_by_shape():
+    from repro.serve.engine import SolverService
+
+    rng = np.random.default_rng(9)
+    svc = SolverService(s=2, delta=0.01, solver="spectra")
+    mats = {}
+    for n in (6, 6, 8):
+        D = doubly_substochastic(rng, n)
+        mats[svc.submit(D)] = D
+    assert len(svc) == 3
+    reports = svc.flush()
+    assert len(svc) == 0
+    assert set(reports) == set(mats)
+    for ticket, D in mats.items():
+        assert reports[ticket].makespan == pytest.approx(
+            solve(Problem(D, 2, 0.01), solver="spectra").makespan
+        )
+
+
+def test_problem_input_validation():
+    with pytest.raises(ValueError):
+        Problem(np.zeros((3, 4)), 2, 0.01)
+    with pytest.raises(ValueError):
+        Problem(np.zeros((3, 3)), 0, 0.01)
+    with pytest.raises(ValueError):
+        Problem(np.zeros((3, 3)), 2, -0.1)
