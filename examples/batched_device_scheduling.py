@@ -4,9 +4,9 @@ The paper runs JV/Hungarian on a controller CPU. DESIGN.md §4 adapts the
 matching step to accelerators with a batched ε-scaling auction — one device
 schedules many demand matrices concurrently (e.g. per-pod matrices each
 controller period). This example drains a whole stack of benchmark matrices
-through ``solve_many`` on the JAX backend — ONE vmapped device call for all
-decompositions, host-side EQUALIZE per instance — and cross-checks against
-the exact numpy path through the same unified API.
+through ``solve_many`` on the JAX backend — ONE vmapped device call fusing
+DECOMPOSE, SCHEDULE, and EQUALIZE, with host schedules materialized lazily —
+and cross-checks against the exact numpy path through the same unified API.
 
     PYTHONPATH=src python examples/batched_device_scheduling.py
 """
@@ -23,8 +23,8 @@ mats = np.stack(
     [benchmark_workload(n=32, m=8, rng=np.random.default_rng(s)) for s in range(4)]
 )
 
-print("batched solve_many on the JAX backend (one vmapped device call), "
-      "host EQUALIZE per instance:\n")
+print("batched solve_many on the JAX backend: one fused vmapped device call "
+      "(decompose + schedule + equalize), lazy host schedules:\n")
 t0 = time.perf_counter()
 reports = solve_many(mats, S, DELTA, solver="spectra_jax")
 dt = time.perf_counter() - t0

@@ -3,9 +3,11 @@
 ``solve_many`` is how a production controller consumes the API: every
 controller period it holds one demand matrix per pod/job and wants them all
 scheduled at once. On the JAX backend (``solver="spectra_jax"``) the whole
-stack is decomposed in a single vmapped device call (host-side EQUALIZE per
-instance); on the numpy backends it falls back to a per-instance loop,
-optionally fanned out over worker processes.
+pipeline — DECOMPOSE, SCHEDULE, *and* EQUALIZE — runs for the entire stack
+in a single vmapped device call over the dense schedule IR, and the
+per-instance ``ParallelSchedule`` objects materialize lazily on access; on
+the numpy backends it falls back to a per-instance loop, optionally fanned
+out over worker processes.
 """
 
 from __future__ import annotations
@@ -45,8 +47,9 @@ def solve_many(
     """Solve a batch of demand matrices; one SolveReport per instance.
 
     Ds may be a stacked ``(B, n, n)`` array or a sequence of square
-    matrices. ``solver="spectra_jax"`` with uniform shapes runs one vmapped
-    device decomposition for the whole batch; every other case loops,
+    matrices. ``solver="spectra_jax"`` with uniform shapes runs the fused
+    DECOMPOSE→SCHEDULE→EQUALIZE device call once for the whole batch (host
+    schedules materialize lazily); every other case loops,
     across ``processes`` workers when given. Worker processes start via
     forkserver/spawn once jax is loaded, so scripts using ``processes``
     need the standard ``if __name__ == "__main__":`` guard.

@@ -1,94 +1,179 @@
-"""JAX backend for the unified solver API.
+"""JAX backend for the unified solver API: the whole pipeline on device.
 
-On-device DECOMPOSE (+ device LPT for telemetry) with the ε-scaling auction,
-then host-side SCHEDULE + EQUALIZE to materialize a concrete
-``ParallelSchedule`` — the same split as ``repro.core.jaxopt``: the k MWM
-solves dominate and run on the accelerator, the O(k·s) list surgery stays on
-the host.
+DECOMPOSE (ε-scaling auction), SCHEDULE (device LPT), and EQUALIZE
+(``lax.while_loop`` over the dense ``DeviceSchedule`` IR) are fused into one
+jitted call — ``repro.core.jaxopt.spectra_jax_e2e`` — and ``solve_many``
+drains a whole stack of demand matrices through its ``vmap`` in a single
+device call. Reports come back with device-computed makespans and *lazy*
+host schedules: the Python-object ``ParallelSchedule`` is only materialized
+when something touches it (validation, simulation, inspection), so the hot
+path never loops over instances on the host.
 
-``decompose_many`` is the vmapped entry point used by ``solve_many``: one
-device call decomposes a whole stack of demand matrices.
+``SolveOptions.extra`` knobs: ``use_kernel`` (Pallas top-2 reduction),
+``equalize`` (default True), ``merge_aware`` (SPECTRA++ merge-aware device
+EQUALIZE), ``extra_slots`` (EQUALIZE split headroom, default 64).
 """
 
 from __future__ import annotations
 
-import functools
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.decompose import Decomposition
 from ..core.equalize import equalize
-from ..core.jaxopt.decompose_jax import (
-    JaxDecomposition,
-    decompose_jax,
-    lpt_schedule_jax,
-    to_decomposition,
-)
-from ..core.schedule import ParallelSchedule, schedule_lpt
+from ..core.jaxopt.e2e import E2EResult, spectra_jax_e2e, spectra_jax_e2e_many
+from ..core.schedule_ir import DeviceSchedule, LazySchedule, ir_to_schedule
 from .problem import Problem, SolveOptions, SolveReport, finish_report
 
 
-@functools.partial(jax.jit, static_argnames=("use_kernel",))
-def _decompose_many_jit(Ds: jax.Array, *, use_kernel: bool = False) -> JaxDecomposition:
-    return jax.vmap(lambda D: decompose_jax(D, use_kernel=use_kernel))(Ds)
-
-
-def decompose_many(Ds, *, use_kernel: bool = False) -> JaxDecomposition:
-    """Batched on-device decomposition of stacked (B, n, n) demand matrices."""
-    Ds = jnp.asarray(Ds, jnp.float32)
-    if Ds.ndim != 3 or Ds.shape[1] != Ds.shape[2]:
-        raise ValueError(f"expected stacked square matrices (B, n, n), got {Ds.shape}")
-    return _decompose_many_jit(Ds, use_kernel=use_kernel)
-
-
-def _index_batch(dec: JaxDecomposition, b: int) -> JaxDecomposition:
-    return JaxDecomposition(
-        perms=dec.perms[b], alphas=dec.alphas[b], k=dec.k[b], converged=dec.converged[b]
+def _e2e_kwargs(options: SolveOptions) -> dict:
+    return dict(
+        use_kernel=bool(options.extra.get("use_kernel", False)),
+        do_equalize=bool(options.extra.get("equalize", True)),
+        merge_aware=bool(options.extra.get("merge_aware", False)),
+        extra_slots=int(options.extra.get("extra_slots", 64)),
     )
 
 
-def _finish_on_host(
-    dec: JaxDecomposition,
-    problem: Problem,
-    options: SolveOptions,
-    runtime_s: float,
-    *,
-    do_equalize: bool = True,
-) -> SolveReport:
-    host = to_decomposition(dec)
-    sched: ParallelSchedule = schedule_lpt(host, problem.s, problem.delta)
-    if do_equalize:
-        sched = equalize(sched)
-    return finish_report(
-        solver="spectra_jax",
-        backend="jax",
-        schedule=sched,
-        problem=problem,
-        options=options,
-        runtime_s=runtime_s,
-        decomposition=host,
-        extras={"k": int(dec.k), "converged": bool(dec.converged)},
-    )
+class _LazyDecomposition(Decomposition):
+    """A ``Decomposition`` whose Python lists build on first access.
+
+    Keeps the batched hot path free of per-round list construction: the
+    report carries the per-instance arrays (one vectorized copy), and the
+    O(k) object materialization happens only if a consumer actually reads
+    ``perms``/``alphas``.
+    """
+
+    def __init__(self, perms_arr: np.ndarray, alphas_arr: np.ndarray):
+        self._perms_arr = perms_arr
+        self._alphas_arr = alphas_arr
+        self._inner: Decomposition | None = None
+
+    def _force(self) -> Decomposition:
+        if self._inner is None:
+            self._inner = Decomposition(
+                perms=[p.astype(np.int64) for p in self._perms_arr],
+                alphas=[float(a) for a in self._alphas_arr],
+            )
+        return self._inner
+
+    @property
+    def perms(self):  # type: ignore[override]
+        return self._force().perms
+
+    @property
+    def alphas(self):  # type: ignore[override]
+        return self._force().alphas
+
+
+class _HostBatch:
+    """One device→host transfer for a whole fused batch, shared by B reports."""
+
+    def __init__(self, res: E2EResult, delta: float, *, merge_aware: bool = False):
+        sched = res.schedule
+        self.merge_aware = merge_aware
+        self.perms = np.asarray(sched.perms)
+        self.alphas = np.asarray(sched.alphas, dtype=np.float64)
+        self.switch = np.asarray(sched.switch)
+        self.makespans = np.asarray(res.makespan, dtype=np.float64)
+        self.lpt_makespans = np.asarray(res.lpt_makespan, dtype=np.float64)
+        self.dec_perms = np.asarray(res.dec.perms)
+        self.dec_alphas = np.asarray(res.dec.alphas, dtype=np.float64)
+        self.k = np.asarray(res.dec.k)
+        self.converged = np.asarray(res.dec.converged)
+        self.eq_exhausted = np.asarray(res.eq_exhausted)
+        self.delta = float(delta)
+
+    def decomposition(self, b: int) -> Decomposition:
+        """Host Decomposition of instance b (pre-EQUALIZE weights), as the
+        pre-fusion backend attached to every report — lazily materialized,
+        with per-instance array copies so it doesn't pin the batch."""
+        k = int(self.k[b])
+        return _LazyDecomposition(
+            self.dec_perms[b][:k].copy(), self.dec_alphas[b][:k].copy()
+        )
+
+    def schedule_thunk(self, b: int, s: int):
+        # Copy the per-instance slices so a report that outlives the flush
+        # pins O(R·n) of its own data, not the whole batch's arrays.
+        perms = self.perms[b].copy()
+        alphas = self.alphas[b].copy()
+        switch = self.switch[b].copy()
+        delta = self.delta
+        exhausted = bool(self.eq_exhausted[b])
+        merge_aware = self.merge_aware
+
+        def build():
+            ds = DeviceSchedule(
+                perms=perms, alphas=alphas, switch=switch, delta=delta
+            )
+            sched = ir_to_schedule(ds, s)
+            if exhausted:
+                # Device EQUALIZE ran out of split headroom; host EQUALIZE
+                # picks up exactly where it stopped, restoring host parity.
+                sched = equalize(sched, merge_aware=merge_aware)
+            return sched
+
+        return build
+
+    def report(
+        self,
+        b: int,
+        problem: Problem,
+        options: SolveOptions,
+        runtime_s: float,
+        *,
+        extras: dict | None = None,
+    ) -> SolveReport:
+        lazy = LazySchedule(self.schedule_thunk(b, problem.s), self.delta)
+        device_makespan = float(self.makespans[b])
+        exhausted = bool(self.eq_exhausted[b])
+        all_extras = {
+            "k": int(self.k[b]),
+            "converged": bool(self.converged[b]),
+            "device_makespan": device_makespan,
+            "device_lpt_makespan": float(self.lpt_makespans[b]),
+            # True when device EQUALIZE ran out of split headroom before the
+            # ≤δ spread (raise options.extra["extra_slots"]); the schedule
+            # thunk finishes with host EQUALIZE, so metrics come from it.
+            "eq_exhausted": exhausted,
+        }
+        all_extras.update(extras or {})
+        return finish_report(
+            solver="spectra_jax",
+            backend="jax",
+            schedule=lazy,
+            problem=problem,
+            options=options,
+            runtime_s=runtime_s,
+            decomposition=self.decomposition(b),
+            # Exhausted instances materialize eagerly so makespan/configs
+            # reflect the host-finished schedule, not the truncated one.
+            makespan=None if exhausted else device_makespan,
+            num_configs=(
+                None if exhausted else int((self.switch[b] >= 0).sum())
+            ),
+            extras=all_extras,
+        )
 
 
 def solve_spectra_jax(problem: Problem, options: SolveOptions) -> SolveReport:
-    """Registry entry: one instance, on-device decompose, host equalize."""
-    use_kernel = bool(options.extra.get("use_kernel", False))
-    do_equalize = bool(options.extra.get("equalize", True))
+    """Registry entry: one instance, full DECOMPOSE→SCHEDULE→EQUALIZE on device."""
     D = jnp.asarray(np.asarray(problem.D), jnp.float32)
+    kwargs = _e2e_kwargs(options)
     t0 = time.perf_counter()
-    dec = decompose_jax(D, use_kernel=use_kernel)
-    _, _, device_makespan = lpt_schedule_jax(
-        dec, problem.s, jnp.float32(problem.delta)
+    res = spectra_jax_e2e(D, problem.s, jnp.float32(problem.delta), **kwargs)
+    jax.block_until_ready(res.makespan)
+    runtime_s = time.perf_counter() - t0
+    batch = _HostBatch(
+        jax.tree_util.tree_map(lambda x: x[None], res),
+        problem.delta,
+        merge_aware=kwargs["merge_aware"],
     )
-    jax.block_until_ready(device_makespan)
-    report = _finish_on_host(
-        dec, problem, options, time.perf_counter() - t0, do_equalize=do_equalize
-    )
-    report.extras["device_lpt_makespan"] = float(device_makespan)
-    return report
+    return batch.report(0, problem, options, runtime_s)
 
 
 def solve_many_jax(
@@ -97,28 +182,28 @@ def solve_many_jax(
     delta: float,
     options: SolveOptions,
 ) -> list[SolveReport]:
-    """Batched path for ``solve_many``: one vmapped device call for the whole
-    stack, then per-instance host SCHEDULE + EQUALIZE + validation."""
-    use_kernel = bool(options.extra.get("use_kernel", False))
-    do_equalize = bool(options.extra.get("equalize", True))
+    """Batched path for ``solve_many``: DECOMPOSE, SCHEDULE, *and* EQUALIZE
+    for the whole stack in one vmapped device call; per-instance host
+    schedules materialize lazily (on validation/access), never eagerly."""
     # Only the device input is float32; reports validate/lower-bound against
     # the caller's matrices, exactly like the single-instance path.
     mats = np.asarray(Ds, dtype=np.float64)
+    kwargs = _e2e_kwargs(options)
     t0 = time.perf_counter()
-    decs = decompose_many(mats.astype(np.float32), use_kernel=use_kernel)
-    jax.block_until_ready(decs.alphas)
+    res = spectra_jax_e2e_many(
+        mats.astype(np.float32), s, jnp.float32(delta), **kwargs
+    )
+    jax.block_until_ready(res.makespan)
     device_s = time.perf_counter() - t0
     B = mats.shape[0]
-    reports = []
-    for b in range(B):
-        problem = Problem(mats[b], s, delta)
-        rep = _finish_on_host(
-            _index_batch(decs, b),
-            problem,
+    batch = _HostBatch(res, delta, merge_aware=kwargs["merge_aware"])
+    return [
+        batch.report(
+            b,
+            Problem(mats[b], s, delta),
             options,
             device_s / B,
-            do_equalize=do_equalize,
+            extras={"batched": True, "batch_size": B, "fused": True},
         )
-        rep.extras.update(batched=True, batch_size=B)
-        reports.append(rep)
-    return reports
+        for b in range(B)
+    ]

@@ -47,11 +47,23 @@ SCHEDULERS: dict[str, ScheduleFn] = {
     ),
 }
 
+def _equalize_jax_stage(sched, problem, *, merge_aware: bool = False, **kw):
+    # Imported lazily so the numpy stage tables never pay for (or require)
+    # jax; the device EQUALIZE round-trips through the DeviceSchedule IR.
+    from ..core.jaxopt.equalize_jax import equalize_jax
+
+    return equalize_jax(sched, problem.n, merge_aware=merge_aware, **kw)
+
+
 EQUALIZERS: dict[str, EqualizeFn] = {
     "none": lambda sched, problem, **kw: sched,
     "standard": lambda sched, problem, **kw: equalize(sched, **kw),
     "merge_aware": lambda sched, problem, **kw: equalize(
         sched, merge_aware=True, **kw
+    ),
+    "jax": _equalize_jax_stage,
+    "jax_merge_aware": lambda sched, problem, **kw: _equalize_jax_stage(
+        sched, problem, merge_aware=True, **kw
     ),
 }
 
@@ -98,6 +110,12 @@ class Pipeline:
     def describe(self) -> str:
         return f"{self.decompose} → {self.schedule} → {self.equalize}"
 
+    @property
+    def backend(self) -> str:
+        """"jax" when any stage runs on device (names the float32 tolerance)."""
+        stages = (self.decompose, self.schedule, self.equalize)
+        return "jax" if any(name.startswith("jax") for name in stages) else "numpy"
+
     def __call__(
         self,
         problem: Problem,
@@ -115,7 +133,7 @@ class Pipeline:
         runtime = time.perf_counter() - t0
         return finish_report(
             solver=solver_name or self.describe(),
-            backend="numpy",
+            backend=self.backend,
             schedule=sched,
             problem=problem,
             options=options,

@@ -87,14 +87,27 @@ def finish_report(
     runtime_s: float,
     decomposition: Decomposition | None = None,
     extras: dict[str, Any] | None = None,
+    makespan: float | None = None,
+    num_configs: int | None = None,
 ) -> SolveReport:
-    """Validate + lower-bound a finished schedule into a SolveReport."""
+    """Validate + lower-bound a finished schedule into a SolveReport.
+
+    ``makespan``/``num_configs`` may be supplied by backends that already
+    computed them (e.g. on device, against a lazily-materialized schedule);
+    when omitted they are derived from ``schedule`` — which is also what
+    happens whenever validation runs, so the reported makespan always agrees
+    exactly with the schedule the validator (and simulator) saw.
+    """
     from ..core.lower_bounds import lower_bound
 
     validated = False
     if options.validate:
         schedule.validate(problem.D, tol=options.tol(backend))
         validated = True
+    if makespan is None or validated:
+        makespan = schedule.makespan()
+    if num_configs is None:
+        num_configs = schedule.num_configs()
     lb = (
         lower_bound(problem.D, problem.s, problem.delta)
         if options.compute_lb
@@ -104,9 +117,9 @@ def finish_report(
         solver=solver,
         backend=backend,
         schedule=schedule,
-        makespan=schedule.makespan(),
+        makespan=makespan,
         lower_bound=lb,
-        num_configs=schedule.num_configs(),
+        num_configs=num_configs,
         runtime_s=runtime_s,
         validated=validated,
         decomposition=decomposition,

@@ -7,7 +7,7 @@ Built-in solvers (see README for the table):
     spectra_pp       beyond-paper best-of ensemble (SPECTRA++)
     spectra_eclipse  ECLIPSE decomposition + our SCHEDULE/EQUALIZE
     baseline_less    LESS-style split-then-schedule comparison baseline
-    spectra_jax      on-device DECOMPOSE+LPT (JAX), host-side EQUALIZE
+    spectra_jax      fused on-device DECOMPOSE+LPT+EQUALIZE (JAX)
 
 A solver is any callable ``(Problem, SolveOptions) -> SolveReport``;
 ``Pipeline`` instances qualify. Register your own with ``register_solver``.

@@ -29,6 +29,16 @@ from .matching import (
 )
 from .improved import local_search, schedule_wrap, spectra_pp
 from .schedule import ParallelSchedule, SwitchSchedule, schedule_lpt
+from .schedule_ir import (
+    DeviceSchedule,
+    LazySchedule,
+    ir_coverage,
+    ir_loads,
+    ir_makespan,
+    ir_num_configs,
+    ir_to_schedule,
+    schedule_to_ir,
+)
 from .spectra import SpectraResult, spectra
 
 # Unified solver API re-exports, resolved lazily to avoid the import cycle
@@ -40,12 +50,15 @@ _API_NAMES = (
 )
 
 __all__ = [
-    "Decomposition", "ParallelSchedule", "SpectraResult", "SwitchSchedule",
+    "Decomposition", "DeviceSchedule", "LazySchedule", "ParallelSchedule",
+    "SpectraResult", "SwitchSchedule",
     "baseline_less", "decompose", "degree", "eclipse_decompose", "equalize",
-    "hungarian_min_cost", "lb_theorem1", "lb_theorem2", "less_split",
-    "local_search", "lower_bound", "max_weight_perfect_matching",
-    "mwm_node_coverage", "perm_matrix", "refine_greedy", "refine_lp",
-    "refine_signed", "schedule_lpt", "schedule_wrap", "spectra", "spectra_pp",
+    "hungarian_min_cost", "ir_coverage", "ir_loads", "ir_makespan",
+    "ir_num_configs", "ir_to_schedule", "lb_theorem1", "lb_theorem2",
+    "less_split", "local_search", "lower_bound",
+    "max_weight_perfect_matching", "mwm_node_coverage", "perm_matrix",
+    "refine_greedy", "refine_lp", "refine_signed", "schedule_lpt",
+    "schedule_to_ir", "schedule_wrap", "spectra", "spectra_pp",
     *_API_NAMES,
 ]
 

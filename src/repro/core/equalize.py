@@ -32,6 +32,22 @@ def equalize(
     loads = sched.loads()
     if max_iters is None:
         max_iters = 64 * (sched.num_configs() + s) + 64
+    # Hash every permutation once (bytes of its int array) so the merge
+    # lookup is O(1) per iteration instead of an O(configs) rescan of the
+    # destination switch. setdefault keeps the first slot on duplicates,
+    # matching the original first-match scan.
+    def perm_key(p: np.ndarray) -> bytes:
+        # Normalized dtype so int32 device perms and int64 host perms with
+        # equal values hash alike, matching np.array_equal semantics.
+        return np.ascontiguousarray(p, dtype=np.int64).tobytes()
+
+    tables: list[dict[bytes, int]] = []
+    if merge_aware:
+        for sw in sched.switches:
+            table: dict[bytes, int] = {}
+            for j, p in enumerate(sw.perms):
+                table.setdefault(perm_key(p), j)
+            tables.append(table)
     for _ in range(max_iters):
         h_max = int(np.argmax(loads))
         h_min = int(np.argmin(loads))
@@ -44,10 +60,8 @@ def equalize(
         dst = sched.switches[h_min]
         merged = -1
         if merge_aware:
-            for j, p in enumerate(dst.perms):
-                if np.array_equal(p, src.perms[z]):
-                    merged = j
-                    break
+            key = perm_key(src.perms[z])
+            merged = tables[h_min].get(key, -1)
         # Target load µ: average of the two loads including the extra δ the
         # destination pays for a brand-new configuration (none if merging).
         setup = 0.0 if merged >= 0 else delta
@@ -61,6 +75,8 @@ def equalize(
         else:
             dst.perms.append(src.perms[z].copy())
             dst.alphas.append(tau)
+            if merge_aware:
+                tables[h_min].setdefault(key, len(dst.perms) - 1)
         loads[h_max] -= tau
         loads[h_min] += setup + tau
     return sched

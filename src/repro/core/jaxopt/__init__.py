@@ -1,0 +1,37 @@
+"""Device (JAX) implementations of the SPECTRA pipeline stages.
+
+Everything here operates on dense, fixed-shape arrays — the
+``repro.core.schedule_ir.DeviceSchedule`` IR — so each stage jits and vmaps:
+
+    auction        ε-scaling auction MWM (the DECOMPOSE inner solver)
+    decompose_jax  Alg. 1 + greedy REFINE; device LPT (Alg. 3) telemetry
+    equalize_jax   Alg. 4 (incl. merge-aware SPECTRA++) as lax.while_loop
+    e2e            fused DECOMPOSE → SCHEDULE → EQUALIZE, single device call
+"""
+
+from .auction import auction_maximize, auction_maximize_batch
+from .decompose_jax import (
+    JaxDecomposition,
+    decompose_jax,
+    lpt_schedule_jax,
+    spectra_jax,
+    to_decomposition,
+)
+from .e2e import E2EResult, spectra_jax_e2e, spectra_jax_e2e_many
+from .equalize_jax import equalize_ir, equalize_ir_jit, equalize_jax
+
+__all__ = [
+    "E2EResult",
+    "JaxDecomposition",
+    "auction_maximize",
+    "auction_maximize_batch",
+    "decompose_jax",
+    "equalize_ir",
+    "equalize_ir_jit",
+    "equalize_jax",
+    "lpt_schedule_jax",
+    "spectra_jax",
+    "spectra_jax_e2e",
+    "spectra_jax_e2e_many",
+    "to_decomposition",
+]

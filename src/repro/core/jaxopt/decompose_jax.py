@@ -7,10 +7,13 @@ on the accelerator itself and be ``vmap``-ed over batches of demand matrices
 node-coverage constraint is encoded in the weights (M-bonus), exactly as in
 the numpy path.
 
-The final EQUALIZE step stays on the host (it is O(k·s) list surgery on the
-emitted schedule — negligible next to the k MWM solves): use
+EQUALIZE runs on device too: the decomposition and LPT assignment produced
+here feed the dense ``repro.core.schedule_ir.DeviceSchedule`` slot table, on
+which ``equalize_jax`` (Alg. 4 as a ``lax.while_loop``) operates — see
+``repro.core.jaxopt.e2e.spectra_jax_e2e`` for the fused single-call pipeline.
 ``to_decomposition`` + ``repro.core.schedule_lpt`` + ``repro.core.equalize``
-to materialize a concrete schedule.
+remain available to materialize/rebuild a host schedule from the raw
+decomposition.
 """
 
 from __future__ import annotations
@@ -56,9 +59,11 @@ def decompose_jax(D: jax.Array, *, use_kernel: bool = False) -> JaxDecomposition
         W = base + jnp.where(S_rem, bonus, 0.0)
         perm, ok = auction_maximize(W, use_kernel=use_kernel)
         newly = S_rem[arange, perm]
+        # α = min D_rem over *newly covered* support, exactly the numpy
+        # "covered_support" rule: a round that newly covers nothing gets α=0
+        # (guarding on newly.any() keeps the inf mask from ever escaping).
         vals = jnp.where(newly, D_rem[arange, perm], jnp.inf)
-        alpha = vals.min()
-        alpha = jnp.where(jnp.isfinite(alpha), alpha, 0.0)
+        alpha = jnp.where(newly.any(), vals.min(), 0.0)
         D_rem = jnp.maximum(D_rem.at[arange, perm].add(-alpha), 0.0)
         S_rem = S_rem.at[arange, perm].set(False)
         perms = perms.at[i].set(perm.astype(jnp.int32))

@@ -1,0 +1,112 @@
+"""Fused DECOMPOSE → SCHEDULE → EQUALIZE on device: one jitted, vmappable call.
+
+``spectra_jax_e2e`` chains the ε-scaling auction decomposition (Alg. 1+2),
+device LPT (Alg. 3), and the ``lax.while_loop`` EQUALIZE (Alg. 4) into a
+single XLA program emitting a dense ``DeviceSchedule``; ``spectra_jax_e2e_many``
+is its ``vmap`` over stacked demand matrices — the controller path that
+re-solves scheduling for many concurrent demand matrices per period without
+a host round-trip between stages.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..schedule_ir import DeviceSchedule
+from .decompose_jax import JaxDecomposition, decompose_jax, lpt_schedule_jax
+from .equalize_jax import device_loads, equalize_ir
+
+
+class E2EResult(NamedTuple):
+    """Device-resident result of the fused pipeline (one instance per lane)."""
+
+    schedule: DeviceSchedule      # post-EQUALIZE slot table
+    dec: JaxDecomposition         # raw DECOMPOSE output (pre-EQUALIZE weights)
+    makespan: jax.Array           # () float32 — max switch load after EQUALIZE
+    lpt_makespan: jax.Array       # () float32 — Alg. 3 makespan before EQUALIZE
+    eq_exhausted: jax.Array       # () bool — EQUALIZE ran out of split slots
+                                  # (raise extra_slots; host parity not reached)
+
+
+def _ir_makespan(ds: DeviceSchedule, s: int) -> jax.Array:
+    return device_loads(ds.alphas, ds.switch, ds.delta, s).max()
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("s", "use_kernel", "do_equalize", "merge_aware", "extra_slots"),
+)
+def spectra_jax_e2e(
+    D: jax.Array,
+    s: int,
+    delta,
+    *,
+    use_kernel: bool = False,
+    do_equalize: bool = True,
+    merge_aware: bool = False,
+    extra_slots: int = 64,
+) -> E2EResult:
+    """Full SPECTRA pipeline for one (n, n) demand matrix, entirely on device.
+
+    ``extra_slots`` is the EQUALIZE split headroom appended to the n
+    decomposition slots (each non-merging split consumes one slot).
+    """
+    D = jnp.asarray(D, jnp.float32)
+    n = D.shape[0]
+    delta = jnp.asarray(delta, jnp.float32)
+    dec = decompose_jax(D, use_kernel=use_kernel)
+    assignment, _, lpt_makespan = lpt_schedule_jax(dec, s, delta)
+    pad_perms = jnp.broadcast_to(
+        jnp.arange(n, dtype=jnp.int32)[None, :], (extra_slots, n)
+    )
+    ds = DeviceSchedule(
+        perms=jnp.concatenate([dec.perms, pad_perms], axis=0),
+        alphas=jnp.concatenate([dec.alphas, jnp.zeros((extra_slots,), jnp.float32)]),
+        switch=jnp.concatenate(
+            [assignment, jnp.full((extra_slots,), -1, jnp.int32)]
+        ),
+        delta=delta,
+    )
+    eq_exhausted = jnp.bool_(False)
+    if do_equalize:
+        ds, eq_exhausted = equalize_ir(ds, s, merge_aware=merge_aware)
+    return E2EResult(
+        schedule=ds,
+        dec=dec,
+        makespan=_ir_makespan(ds, s),
+        lpt_makespan=lpt_makespan,
+        eq_exhausted=eq_exhausted,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("s", "use_kernel", "do_equalize", "merge_aware", "extra_slots"),
+)
+def spectra_jax_e2e_many(
+    Ds: jax.Array,
+    s: int,
+    delta,
+    *,
+    use_kernel: bool = False,
+    do_equalize: bool = True,
+    merge_aware: bool = False,
+    extra_slots: int = 64,
+) -> E2EResult:
+    """vmapped fused pipeline over stacked (B, n, n) demand matrices."""
+    Ds = jnp.asarray(Ds, jnp.float32)
+    return jax.vmap(
+        lambda D: spectra_jax_e2e(
+            D,
+            s,
+            delta,
+            use_kernel=use_kernel,
+            do_equalize=do_equalize,
+            merge_aware=merge_aware,
+            extra_slots=extra_slots,
+        )
+    )(Ds)

@@ -1,0 +1,202 @@
+"""On-device EQUALIZE (Alg. 4) over the dense ``DeviceSchedule`` IR.
+
+Mirrors ``repro.core.equalize`` with array state inside ``lax.while_loop``:
+each iteration moves a ``τ = (L_max − L_min − setup)/2`` slice of the longest
+permutation on the most-loaded switch into a fresh slot on the least-loaded
+switch (which pays one extra reconfiguration δ), until the spread is at most
+δ, the longest permutation is too short to split, or the slot table runs out
+of free capacity.
+
+``merge_aware=True`` is the SPECTRA++ variant: when the moved permutation
+already exists on the target switch its weight merges into that slot — no
+extra δ. Permutation equality is resolved by hashing once up front: every
+slot gets a canonical id (the first slot carrying an identical permutation),
+the device analogue of the host path's ``perm.tobytes()`` hash table, so the
+loop body compares single int32s instead of rescanning (R, n) rows.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..schedule_ir import DeviceSchedule
+
+
+def _canonical_ids(perms: jax.Array) -> jax.Array:
+    """canon[r] = smallest r' with perms[r'] == perms[r] (exact, no collisions).
+
+    Folds the row-equality matrix one column at a time so peak memory is
+    O(R²), not the O(R²·n) of a broadcast all-pairs comparison — at
+    production fabric sizes (n ≥ 512) the latter is gigabytes per vmap lane.
+    """
+    n = perms.shape[1]
+
+    def fold(j, eq):
+        col = perms[:, j]
+        return eq & (col[:, None] == col[None, :])
+
+    eq0 = perms[:, 0][:, None] == perms[:, 0][None, :]  # (R, R)
+    eq = jax.lax.fori_loop(1, n, fold, eq0)
+    return jnp.argmax(eq, axis=1).astype(jnp.int32)
+
+
+def device_loads(alphas: jax.Array, switch: jax.Array, delta, s: int) -> jax.Array:
+    """Per-switch loads (Σα + δ·configs) over live slots — the single jnp
+    definition of the load formula, shared by EQUALIZE and the fused e2e."""
+    live = switch >= 0
+    contrib = jnp.where(live, alphas + delta, 0.0)
+    return jnp.zeros((s,), jnp.float32).at[jnp.where(live, switch, 0)].add(contrib)
+
+
+def equalize_ir(
+    ds: DeviceSchedule,
+    s: int,
+    *,
+    merge_aware: bool = False,
+    max_iters: int | None = None,
+) -> tuple[DeviceSchedule, jax.Array]:
+    """Alg. 4 on device; returns ``(schedule, exhausted)`` (same capacity).
+
+    ``exhausted`` is a () bool set when the slot table ran out of split
+    headroom — the one stop condition the host path doesn't have, i.e. the
+    only case where this result can be worse than host EQUALIZE. Callers
+    should surface it (the API backend puts it in report extras; the host
+    stage wrapper finishes the job with host EQUALIZE).
+
+    Trace-safe and ``vmap``-able: once an instance converges its loop body
+    becomes a no-op, so batched lanes simply coast until the slowest one
+    finishes. ``max_iters`` defaults to the host path's ``64·(configs+s)+64``.
+    """
+    R = ds.perms.shape[0]
+    perms0 = ds.perms.astype(jnp.int32)
+    alphas0 = ds.alphas.astype(jnp.float32)
+    switch0 = ds.switch.astype(jnp.int32)
+    delta = jnp.asarray(ds.delta, jnp.float32)
+    count0 = (switch0 >= 0).sum().astype(jnp.int32)
+    iter_cap = (
+        jnp.int32(max_iters)
+        if max_iters is not None
+        else 64 * (count0 + jnp.int32(s)) + 64
+    )
+    canon0 = _canonical_ids(perms0) if merge_aware else jnp.zeros((R,), jnp.int32)
+
+    def cond(st):
+        _, _, _, _, _, it, done, _ = st
+        return (~done) & (it < iter_cap)
+
+    def body(st):
+        perms, alphas, switch, canon, count, it, _, exhausted = st
+        live = switch >= 0
+        loads = device_loads(alphas, switch, delta, s)
+        h_max = jnp.argmax(loads)
+        h_min = jnp.argmin(loads)
+        spread_ok = loads[h_max] - loads[h_min] <= delta
+        # Longest slot on the most-loaded switch.
+        on_max = live & (switch == h_max)
+        z = jnp.argmax(jnp.where(on_max, alphas, -jnp.inf))
+        no_source = ~on_max.any()
+        # Merge target: same canonical permutation already on the min switch.
+        if merge_aware:
+            mmask = live & (switch == h_min) & (canon == canon[z])
+            can_merge = mmask.any()
+            j = jnp.argmax(mmask)
+        else:
+            can_merge = jnp.bool_(False)
+            j = jnp.int32(0)
+        setup = jnp.where(can_merge, 0.0, delta)
+        mu = (loads[h_max] + loads[h_min] + setup) / 2.0
+        tau = loads[h_max] - mu
+        # Exhaustion only counts when headroom was the *binding* stop reason —
+        # a lane that also converged (or ran out of splittable weight) is fine.
+        other_stop = spread_ok | no_source | (tau <= 0) | (alphas[z] <= tau)
+        out_of_slots = (~can_merge) & (count >= R) & ~other_stop
+        done = other_stop | out_of_slots
+        go = ~done
+        tau = jnp.where(go, tau, 0.0)
+        alphas = alphas.at[z].add(-tau)
+        do_merge = go & can_merge
+        alphas = alphas.at[j].add(jnp.where(do_merge, tau, 0.0))
+        do_split = go & ~can_merge
+        alphas = alphas.at[count].set(
+            jnp.where(do_split, tau, alphas[count]), mode="drop"
+        )
+        switch = switch.at[count].set(
+            jnp.where(do_split, h_min.astype(jnp.int32), switch[count]), mode="drop"
+        )
+        perms = perms.at[count].set(
+            jnp.where(do_split, perms[z], perms[count]), mode="drop"
+        )
+        canon = canon.at[count].set(
+            jnp.where(do_split, canon[z], canon[count]), mode="drop"
+        )
+        count = count + do_split.astype(jnp.int32)
+        return (
+            perms, alphas, switch, canon, count, it + 1, done,
+            exhausted | out_of_slots,
+        )
+
+    if s <= 1:
+        out = DeviceSchedule(
+            perms=perms0, alphas=alphas0, switch=switch0, delta=delta
+        )
+        return out, jnp.bool_(False)
+    init = (
+        perms0, alphas0, switch0, canon0, count0,
+        jnp.int32(0), jnp.bool_(False), jnp.bool_(False),
+    )
+    perms, alphas, switch, _, _, _, _, exhausted = jax.lax.while_loop(
+        cond, body, init
+    )
+    out = DeviceSchedule(perms=perms, alphas=alphas, switch=switch, delta=delta)
+    return out, exhausted
+
+
+@functools.partial(jax.jit, static_argnames=("s", "merge_aware", "max_iters"))
+def equalize_ir_jit(
+    ds: DeviceSchedule,
+    s: int,
+    *,
+    merge_aware: bool = False,
+    max_iters: int | None = None,
+):
+    """Jitted ``equalize_ir``; returns ``(schedule, exhausted)``."""
+    return equalize_ir(ds, s, merge_aware=merge_aware, max_iters=max_iters)
+
+
+def equalize_jax(sched, n: int | None = None, *, merge_aware: bool = False,
+                 extra_slots: int = 64, max_iters: int | None = None):
+    """Host convenience: ParallelSchedule → device EQUALIZE → ParallelSchedule.
+
+    This is what the ``"jax"`` entry of the ``EQUALIZERS`` stage registry
+    calls; ``n`` defaults to the fabric size of the first permutation. In
+    the rare case the device pass exhausts its split headroom, host
+    EQUALIZE finishes the job (it picks up exactly where the device left
+    off — Alg. 4 is an iterative improvement loop).
+    """
+    from ..equalize import equalize
+    from ..schedule_ir import ir_to_schedule, schedule_to_ir
+
+    s = sched.s
+    if n is None:
+        for sw in sched.switches:
+            if sw.perms:
+                n = len(sw.perms[0])
+                break
+        else:
+            return sched  # nothing scheduled anywhere
+    # Bucket the capacity to a multiple of 64 so the jitted while_loop sees
+    # a stable (R, n) shape across instances with different config counts —
+    # otherwise every distinct num_configs would trigger a fresh XLA compile.
+    needed = sched.num_configs() + extra_slots
+    capacity = -(-needed // 64) * 64
+    ds = schedule_to_ir(sched, n, capacity=capacity)
+    out, exhausted = equalize_ir_jit(
+        ds, s, merge_aware=merge_aware, max_iters=max_iters
+    )
+    result = ir_to_schedule(out, s)
+    if bool(exhausted) and max_iters is None:
+        result = equalize(result, merge_aware=merge_aware)
+    return result

@@ -10,8 +10,10 @@ serve_step with a donated cache.
 ``SolverService`` — the scheduling half of the serving story: clients submit
 demand matrices (one per pod/job per controller period), the service groups
 same-shape instances and drains them through the unified
-``repro.api.solve_many`` — one vmapped device call per group on the JAX
-backend, a (optionally multiprocess) loop otherwise.
+``repro.api.solve_many``. On the JAX backend each group runs the *fused*
+DECOMPOSE→SCHEDULE→EQUALIZE pipeline in one vmapped device call (host
+schedules materialize lazily per ticket); numpy solvers loop, optionally
+across worker processes.
 """
 
 from __future__ import annotations
@@ -85,7 +87,9 @@ class SolverService:
 
     ``submit`` enqueues a demand matrix and returns a ticket; ``flush``
     solves everything queued — batching same-shape matrices into one
-    ``solve_many`` call each — and returns ``{ticket: SolveReport}``.
+    ``solve_many`` call each (on the JAX backend: one fused
+    decompose/schedule/equalize device call per group) — and returns
+    ``{ticket: SolveReport}``.
     """
 
     s: int
@@ -131,10 +135,10 @@ class SolverService:
                 for (ticket, _), rep in zip(batch, reports):
                     out[ticket] = rep
         except Exception:
-            # One bad matrix must not drop the other pods' requests: put
-            # every unresolved submission back on the queue before raising.
-            self._queue = [
-                (t, D) for t, D in pending if t not in out
-            ] + self._queue
+            # One bad matrix must not drop the other pods' requests. Nothing
+            # from this flush has been delivered (the raise discards `out`,
+            # including groups that already solved), so every submission goes
+            # back on the queue to be re-solved by the next flush.
+            self._queue = list(pending) + self._queue
             raise
         return out

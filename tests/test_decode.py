@@ -9,6 +9,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # per-arch decode replay compiles: ~2.5 min total
+
 from repro.configs.base import ShapeCfg
 from repro.configs.registry import ARCHS
 from repro.models.registry import build_model, concrete_inputs

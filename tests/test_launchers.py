@@ -1,12 +1,17 @@
 """Launcher CLIs run end-to-end (subprocess smoke tests)."""
 
 import json
+import os
 import subprocess
 import sys
 from pathlib import Path
 
 REPO = Path(__file__).resolve().parents[1]
 ENV = {"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"}
+# Pin the platform in the hermetic child env (CPU unless the caller says
+# otherwise): on hosts with libtpu installed but no TPU attached, an
+# unpinned child hangs for minutes probing for accelerators.
+ENV["JAX_PLATFORMS"] = os.environ.get("JAX_PLATFORMS", "cpu")
 
 
 def run_cli(args, timeout=420):

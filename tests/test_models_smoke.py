@@ -10,6 +10,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # compiles every registered arch: ~40 s
+
 from repro.configs.base import ShapeCfg
 from repro.configs.registry import ARCHS
 from repro.models.registry import build_model, concrete_inputs

@@ -15,6 +15,8 @@ import numpy as np
 import pytest
 
 hypothesis = pytest.importorskip("hypothesis")
+
+pytestmark = pytest.mark.slow  # hypothesis sweeps: long where hypothesis is installed
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (

@@ -165,6 +165,23 @@ def test_solver_service_batches_by_shape():
         )
 
 
+def test_solver_service_failed_flush_requeues_everything():
+    from repro.serve.engine import SolverService
+
+    rng = np.random.default_rng(10)
+    svc = SolverService(s=2, delta=0.01, solver="spectra")
+    good = svc.submit(doubly_substochastic(rng, 4))
+    bad = svc.submit(np.full((6, 6), -1.0))  # negative demand → decompose raises
+    with pytest.raises(Exception):
+        svc.flush()
+    # Nothing was delivered, so *both* tickets must survive for the next
+    # flush — including ones whose shape-group had already solved.
+    assert len(svc) == 2
+    svc._queue = [(t, D) for t, D in svc._queue if t == good]
+    reports = svc.flush()
+    assert set(reports) == {good}
+
+
 def test_problem_input_validation():
     with pytest.raises(ValueError):
         Problem(np.zeros((3, 4)), 2, 0.01)
