@@ -1,9 +1,10 @@
 """Shared helpers for the paper-figure benchmarks.
 
 Algorithms are addressed by their ``repro.api`` registry names (plus the
-pseudo-solver ``"lb"`` for the §IV lower bound); ``sweep`` resolves names
-through the unified ``solve`` entry point, so there are no per-algorithm
-adapter functions here.
+pseudo-solver ``"lb"`` for the §IV lower bound) and workloads by their
+``repro.scenarios`` registry names; ``sweep`` resolves both through the
+unified entry points (``solve`` / ``make_trace``), so there are no
+per-algorithm adapters or fig-local generators here.
 """
 
 from __future__ import annotations
@@ -40,19 +41,42 @@ def solver_fn(spec):
     ).makespan
 
 
-def sweep(workload_fn, algos, s_values, deltas=DELTAS, seeds=None):
+def scenario_matrices(scenario, seeds: int, **overrides) -> list[np.ndarray]:
+    """Materialize the per-seed matrices of a registered scenario name.
+
+    One trace of ``seeds`` periods: period ``t`` is exactly the matrix the
+    fig scripts historically drew as ``workload_fn(rng=default_rng(t))``
+    (the registry seeds period ``t`` with ``seed + t``).
+    """
+    from repro.scenarios import make_trace
+
+    return list(make_trace(scenario, periods=seeds, **overrides).demands)
+
+
+def sweep(scenario, algos, s_values, deltas=DELTAS, seeds=None, **overrides):
     """→ rows of dict(workload-ready) mean makespans over seeds.
 
-    ``algos`` maps column name → registry solver name (or callable).
+    ``scenario`` is a ``repro.scenarios`` registry name (extra keyword
+    arguments override its spec/params — e.g. ``noise=0.01``) or, for
+    legacy call sites, a callable ``workload_fn(rng=...)`` sampled once per
+    seed. ``algos`` maps column name → registry solver name (or callable).
     """
     seeds = SEEDS if seeds is None else seeds
+    if callable(scenario):
+        if overrides:  # only the registry path can apply spec overrides
+            raise TypeError(
+                f"overrides {sorted(overrides)} require a scenario name; "
+                "bind kwargs into the callable (functools.partial) instead"
+            )
+        mats = [scenario(rng=np.random.default_rng(t)) for t in range(seeds)]
+    else:
+        mats = scenario_matrices(scenario, seeds, **overrides)
     fns = {name: solver_fn(spec) for name, spec in algos.items()}
     rows = []
     for s in s_values:
         for delta in deltas:
             acc = {name: [] for name in fns}
-            for seed in range(seeds):
-                D = workload_fn(rng=np.random.default_rng(seed))
+            for D in mats:
                 for name, fn in fns.items():
                     acc[name].append(fn(D, s, float(delta)))
             row = {"s": s, "delta": float(delta)}

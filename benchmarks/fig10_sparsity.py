@@ -2,11 +2,9 @@
 
 from __future__ import annotations
 
-import functools
-
 import numpy as np
 
-from .common import OUT_DIR, SEEDS, ratio, solver_fn, timed, write_csv
+from .common import OUT_DIR, SEEDS, ratio, scenario_matrices, solver_fn, timed, write_csv
 
 M_VALUES = (4, 8, 12, 16, 24, 32)
 DELTA = 0.04
@@ -19,16 +17,14 @@ ALGOS = {
 
 
 def _sweep_m(s: int):
-    from repro.traffic.workloads import benchmark_workload
-
     rows = []
     fns = {name: solver_fn(spec) for name, spec in ALGOS.items()}
     for m in M_VALUES:
-        num_big = max(1, m // 4)
-        wfn = functools.partial(benchmark_workload, m=m, num_big=num_big)
+        # "benchmark" scenario at this sparsity; the family's num_big
+        # default already tracks max(1, m // 4).
+        mats = scenario_matrices("benchmark", SEEDS, m=m)
         acc = {name: [] for name in fns}
-        for seed in range(SEEDS):
-            D = wfn(rng=np.random.default_rng(seed))
+        for D in mats:
             for name, fn in fns.items():
                 acc[name].append(fn(D, s, DELTA))
         row = {"s": s, "m": m}

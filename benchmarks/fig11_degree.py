@@ -8,8 +8,6 @@ from __future__ import annotations
 
 import math
 
-import numpy as np
-
 from .common import FAST, OUT_DIR, timed, write_csv
 
 
@@ -25,12 +23,20 @@ def p_degree_model(n: int, k: int) -> float:
     return 1.0 - (1.0 - p_line(n, k)) ** (2 * n)
 
 
-def simulate_p_degree(n: int, k: int, trials: int, rng) -> float:
+def simulate_p_degree(n: int, k: int, trials: int) -> float:
+    """P(degree = k) over ``trials`` draws of the "permutations" scenario.
+
+    Each trial is one period of a sum-of-k-random-permutations trace from
+    the scenario registry; the seed is derived from (n, k) so every figure
+    cell draws independent trials rather than sharing period streams.
+    """
+    from repro.scenarios import make_trace
+
+    trace = make_trace(
+        "permutations", n=n, periods=trials, k=k, seed=n * 10007 + k * 101
+    )
     hits = 0
-    for _ in range(trials):
-        D = np.zeros((n, n))
-        for _ in range(k):
-            D[np.arange(n), rng.permutation(n)] += rng.random() + 0.05
+    for D in trace:
         S = D > 0
         deg = max(S.sum(1).max(), S.sum(0).max())
         hits += deg == k
@@ -39,7 +45,6 @@ def simulate_p_degree(n: int, k: int, trials: int, rng) -> float:
 
 def run():
     trials = 60 if FAST else 200
-    rng = np.random.default_rng(0)
 
     def _go():
         rows = []
@@ -50,7 +55,7 @@ def run():
                     "n": 100,
                     "k": k,
                     "model": p_degree_model(100, k),
-                    "sim": simulate_p_degree(100, k, trials, rng),
+                    "sim": simulate_p_degree(100, k, trials),
                 }
             )
         for n in (20, 30, 50, 75, 100, 150):  # panel (b): k = 16
@@ -62,7 +67,7 @@ def run():
                     "n": n,
                     "k": 16,
                     "model": p_degree_model(n, 16),
-                    "sim": simulate_p_degree(n, 16, trials, rng),
+                    "sim": simulate_p_degree(n, 16, trials),
                 }
             )
         return rows

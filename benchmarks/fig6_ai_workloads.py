@@ -18,11 +18,9 @@ ALGOS = {
 
 
 def run():
-    from repro.traffic.workloads import gpt3b_workload, moe_workload
-
     rows_out = []
-    for wname, wfn in (("gpt", gpt3b_workload), ("moe", moe_workload)):
-        data, dt = timed(sweep, wfn, ALGOS, s_values=(2, 4))
+    for wname in ("gpt", "moe"):  # repro.scenarios registry names
+        data, dt = timed(sweep, wname, ALGOS, s_values=(2, 4))
         write_csv(OUT_DIR / f"fig6_{wname}.csv", data)
         rows_out.append(
             {

@@ -12,11 +12,9 @@ ALGOS = {"spectra": "spectra", "spectra_no_eq": "spectra_no_eq"}
 
 
 def run():
-    from repro.traffic.workloads import gpt3b_workload, moe_workload
-
     rows_out = []
-    for wname, wfn in (("gpt", gpt3b_workload), ("moe", moe_workload)):
-        data, dt = timed(sweep, wfn, ALGOS, s_values=(2, 4))
+    for wname in ("gpt", "moe"):  # repro.scenarios registry names
+        data, dt = timed(sweep, wname, ALGOS, s_values=(2, 4))
         write_csv(OUT_DIR / f"fig7_{wname}.csv", data)
         rows_out.append(
             {

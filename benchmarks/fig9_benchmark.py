@@ -17,9 +17,7 @@ ALGOS = {
 
 
 def run():
-    from repro.traffic.workloads import benchmark_workload
-
-    data, dt = timed(sweep, benchmark_workload, ALGOS, s_values=(2, 4))
+    data, dt = timed(sweep, "benchmark", ALGOS, s_values=(2, 4))
     write_csv(OUT_DIR / "fig9_benchmark.csv", data)
     return [
         {

@@ -13,15 +13,9 @@ ALGOS = {"spectra": "spectra", "spectra_pp": "spectra_pp"}
 
 
 def run():
-    from repro.traffic.workloads import benchmark_workload, gpt3b_workload, moe_workload
-
     rows_out = []
-    for wname, wfn in (
-        ("gpt", gpt3b_workload),
-        ("moe", moe_workload),
-        ("benchmark", benchmark_workload),
-    ):
-        data, dt = timed(sweep, wfn, ALGOS, s_values=(2, 4))
+    for wname in ("gpt", "moe", "benchmark"):  # repro.scenarios registry names
+        data, dt = timed(sweep, wname, ALGOS, s_values=(2, 4))
         write_csv(OUT_DIR / f"improved_{wname}.csv", data)
         rows_out.append(
             {

@@ -1,22 +1,61 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
-"""Benchmark driver: python -m benchmarks.run [--fast]
+"""Benchmark driver: python -m benchmarks.run [--fast] [--scenario NAME ...]
 
-Runs every paper-figure benchmark (Fig. 6-11), the runtime table, the
-beyond-paper SPECTRA++ table, and — if dry-run artifacts exist under
-benchmarks/out/dryrun — the roofline summary. Writes per-figure CSVs to
-benchmarks/out/ and prints one ``name,us_per_call,derived`` line per table.
+Default mode runs every paper-figure benchmark (Fig. 6-11), the runtime
+table, the beyond-paper SPECTRA++ table, and — if dry-run artifacts exist
+under benchmarks/out/dryrun — the roofline summary, writing per-figure CSVs
+to benchmarks/out/.
+
+``--scenario`` mode instead drives named ``repro.scenarios`` registry
+entries end-to-end through ``run_scenario`` (whole trace → one batched
+``solve_many``): ``--scenario gpt moe`` or ``--scenario all``, with
+``--solver`` picking the registry solver (default spectra) and ``--periods``
+overriding the trace length. ``--fast`` shrinks scenario mode to tiny
+(n=8, T=3) variants — the smoke-lane configuration.
+
+Either mode prints one ``name,us_per_call,derived`` line per table.
 """
 
 from __future__ import annotations
 
+import argparse
 import os
 import sys
 
 
-def main() -> None:
-    if "--fast" in sys.argv:
-        os.environ["REPRO_BENCH_FAST"] = "1"
+def _run_scenarios(names: list[str], solver: str, periods: int | None, fast: bool) -> None:
+    from repro.scenarios import list_scenarios, run_scenario
 
+    if names == ["all"]:
+        names = list_scenarios()
+    overrides: dict = {}
+    if fast:
+        overrides.update(n=8, periods=3)
+    if periods is not None:
+        overrides["periods"] = periods
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in names:
+        try:
+            rep = run_scenario(name, solver=solver, **overrides)
+        except Exception as exc:
+            print(f"scenario_{name},nan,ERROR:{type(exc).__name__}:{exc}")
+            failures += 1
+            continue
+        s = rep.summary()
+        derived = (
+            f"T={s['periods']};n={s['n']};mean_mk={s['mean_makespan']:.4f};"
+            f"gap={s['geomean_gap']:.3f};buckets={s['buckets']}"
+        )
+        if rep.spec.units == "bytes":
+            derived += f";cct_s={s['total_cct_s']:.4g}"
+        print(f"scenario_{name},{1e6 * s['runtime_s'] / max(s['periods'], 1):.0f},{derived}")
+        sys.stdout.flush()
+    if failures:  # scenario mode gates CI — a broken scenario must fail the job
+        sys.exit(1)
+
+
+def _run_figures() -> None:
     from . import (
         fig6_ai_workloads,
         fig7_equalize,
@@ -55,6 +94,26 @@ def main() -> None:
         for r in rows:
             print(f"{r['name']},{r['us_per_call']},{r['derived']}")
         sys.stdout.flush()
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true",
+                    help="cheap settings (fewer seeds; tiny scenario variants)")
+    ap.add_argument("--scenario", nargs="+", metavar="NAME", default=None,
+                    help="run these repro.scenarios names (or 'all') instead of the fig tables")
+    ap.add_argument("--solver", default="spectra",
+                    help="repro.api solver for --scenario mode (default: spectra)")
+    ap.add_argument("--periods", type=int, default=None,
+                    help="override trace length T in --scenario mode")
+    args = ap.parse_args(argv)
+
+    if args.fast:
+        os.environ["REPRO_BENCH_FAST"] = "1"
+    if args.scenario:
+        _run_scenarios(args.scenario, args.solver, args.periods, args.fast)
+    else:
+        _run_figures()
 
 
 if __name__ == "__main__":

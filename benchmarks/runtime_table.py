@@ -15,7 +15,7 @@ import numpy as np
 from .common import FAST, OUT_DIR, write_csv
 
 
-def _batched_device_ms(wfn, s: int, delta: float, B: int):
+def _batched_device_ms(scenario: str, s: int, delta: float, B: int):
     """Per-instance ms for one fused vmapped device call over B matrices.
 
     One timed repetition after the compile warmup: on CPU hosts the device
@@ -24,10 +24,11 @@ def _batched_device_ms(wfn, s: int, delta: float, B: int):
     """
     try:
         from repro.api import SolveOptions, solve_many
+        from repro.scenarios import make_trace
     except Exception:  # pragma: no cover - jax missing
         return None
     opts = SolveOptions(validate=False, compute_lb=False)
-    Ds = np.stack([wfn(rng=np.random.default_rng(1000 + b)) for b in range(B)])
+    Ds = make_trace(scenario, periods=B, seed=1000).demands
     try:
         solve_many(Ds, s, delta, solver="spectra_jax", options=opts)  # compile
     except Exception:  # pragma: no cover - jax missing / no device
@@ -39,20 +40,19 @@ def _batched_device_ms(wfn, s: int, delta: float, B: int):
 
 def run():
     from repro.api import Problem, SolveOptions, solve
-    from repro.traffic.workloads import benchmark_workload, gpt3b_workload, moe_workload
+    from .common import scenario_matrices
 
     reps = 3 if FAST else 10
     batch = 4 if FAST else 16
     opts = SolveOptions(validate=False, compute_lb=False)
     rows, out = [], []
-    for wname, wfn, s in (
-        ("gpt_s4", gpt3b_workload, 4),
-        ("moe_s4", moe_workload, 4),
-        ("benchmark_s4", benchmark_workload, 4),
+    for wname, scenario, s in (
+        ("gpt_s4", "gpt", 4),
+        ("moe_s4", "moe", 4),
+        ("benchmark_s4", "benchmark", 4),
     ):
         times = []
-        for seed in range(reps):
-            D = wfn(rng=np.random.default_rng(seed))
+        for D in scenario_matrices(scenario, reps):
             t0 = time.perf_counter()
             solve(Problem(D, s, 0.01), solver="spectra", options=opts)
             times.append(time.perf_counter() - t0)
@@ -62,7 +62,7 @@ def run():
         # minutes of CPU-backend auction iterations per dispatch.
         n = len(D)
         dev_ms = (
-            _batched_device_ms(wfn, s, 0.01, batch)
+            _batched_device_ms(scenario, s, 0.01, batch)
             if (not FAST or n <= 32)
             else None
         )

@@ -1,0 +1,47 @@
+"""Scenario & trace API: from a workload name to a scheduled report.
+
+The paper's setting is *time-varying* traffic — the controller re-solves
+scheduling every period. The scenario registry makes that a one-liner:
+materialize a (T, n, n) demand trace, push it through the batched solver,
+get per-period makespans / gaps / CCT back.
+
+    PYTHONPATH=src python examples/scenario_trace.py
+"""
+
+from repro.scenarios import get_scenario, list_scenarios, make_trace, run_scenario
+from repro.serve.engine import SolverService
+
+print("registered scenarios:")
+for name in list_scenarios():
+    sc = get_scenario(name)
+    spec = sc.spec
+    print(f"  {name:16s} family={spec.family:12s} n={spec.n:<3d} T={spec.periods} "
+          f"units={spec.units:6s} — {sc.description}")
+
+# A whole training run of GPT traffic through one batched solve_many call.
+print("\n=== run_scenario('gpt'): 8 periods, one batched dispatch ===")
+rep = run_scenario("gpt", solver="spectra")
+for p in rep.periods:
+    print(f"  period {p.period}: makespan={p.makespan:.4f} "
+          f"LB={p.lower_bound:.4f} gap={p.gap:.3f}x configs={p.num_configs}")
+print(f"aggregate: mean={rep.makespans.mean():.4f} "
+      f"geomean gap={rep.geomean_gap:.3f}x shape buckets={rep.num_shape_buckets}")
+
+# Byte traffic: the collective_ring scenario is denominated in bytes; the
+# trace is normalized fabric-globally and CCT comes back in seconds.
+print("\n=== run_scenario('collective_ring'): bytes → CCT seconds ===")
+rep = run_scenario("collective_ring", solver="spectra", simulate=True)
+print(f"unit_s={rep.unit_s:.3e} δ_units={rep.delta_units:.3e}")
+for p in rep.periods:
+    print(f"  period {p.period}: CCT={p.cct_s*1e3:.2f} ms "
+          f"(gap {p.gap:.3f}x, demand met: {p.demand_met})")
+print(f"total CCT over the run: {rep.total_cct_s*1e3:.1f} ms")
+
+# The serving story: a client submits a whole trace; flush drains it through
+# one batched solve_many group per shape.
+print("\n=== SolverService.submit_trace: a training run as tickets ===")
+svc = SolverService(s=4, delta=0.01, solver="spectra")
+tickets = svc.submit_trace(make_trace("moe", n=16, periods=4, tokens_per_gpu=512))
+reports = svc.flush()
+for t in tickets:
+    print(f"  ticket {t}: makespan={reports[t].makespan:.4f}")

@@ -2,12 +2,13 @@
 
 ``solve_many`` is how a production controller consumes the API: every
 controller period it holds one demand matrix per pod/job and wants them all
-scheduled at once. On the JAX backend (``solver="spectra_jax"``) the whole
-pipeline — DECOMPOSE, SCHEDULE, *and* EQUALIZE — runs for the entire stack
-in a single vmapped device call over the dense schedule IR, and the
-per-instance ``ParallelSchedule`` objects materialize lazily on access; on
-the numpy backends it falls back to a per-instance loop, optionally fanned
-out over worker processes.
+scheduled at once. On the JAX backend (``solver="spectra_jax"``) instances
+are grouped into shape buckets and the whole pipeline — DECOMPOSE,
+SCHEDULE, *and* EQUALIZE — runs for each bucket in a single vmapped device
+call over the dense schedule IR (ragged-n batching: mixed matrix sizes cost
+one dispatch per distinct shape), with per-instance ``ParallelSchedule``
+objects materializing lazily on access; on the numpy backends it falls back
+to a per-instance loop, optionally fanned out over worker processes.
 """
 
 from __future__ import annotations
@@ -18,16 +19,19 @@ from .problem import Problem, SolveOptions, SolveReport
 from .registry import solve
 
 
-def _as_stack(Ds) -> tuple[list[np.ndarray], bool]:
-    """Normalize to a list of square matrices; report whether shapes match."""
+def _as_stack(Ds) -> list[np.ndarray]:
+    """Normalize to a list of square matrices."""
     if isinstance(Ds, np.ndarray) and Ds.ndim == 3:
-        mats = [Ds[b] for b in range(Ds.shape[0])]
-    else:
-        mats = [np.asarray(D) for D in Ds]
-    if not mats:
-        return [], True
-    uniform = all(D.shape == mats[0].shape for D in mats)
-    return mats, uniform
+        return [Ds[b] for b in range(Ds.shape[0])]
+    return [np.asarray(D) for D in Ds]
+
+
+def shape_buckets(mats: list[np.ndarray]) -> dict[tuple[int, ...], list[int]]:
+    """Group instance indices by matrix shape, preserving submission order."""
+    buckets: dict[tuple[int, ...], list[int]] = {}
+    for i, D in enumerate(mats):
+        buckets.setdefault(D.shape, []).append(i)
+    return buckets
 
 
 def _solve_one(args) -> SolveReport:
@@ -47,24 +51,35 @@ def solve_many(
     """Solve a batch of demand matrices; one SolveReport per instance.
 
     Ds may be a stacked ``(B, n, n)`` array or a sequence of square
-    matrices. ``solver="spectra_jax"`` with uniform shapes runs the fused
-    DECOMPOSE→SCHEDULE→EQUALIZE device call once for the whole batch (host
-    schedules materialize lazily); every other case loops,
-    across ``processes`` workers when given. Worker processes start via
-    forkserver/spawn once jax is loaded, so scripts using ``processes``
-    need the standard ``if __name__ == "__main__":`` guard.
+    matrices — the shapes need not match. ``solver="spectra_jax"`` groups
+    the instances into **shape buckets** (ragged-n batching): each bucket
+    runs the fused DECOMPOSE→SCHEDULE→EQUALIZE device call once for all its
+    instances (host schedules materialize lazily), and results come back in
+    submission order regardless of bucketing — so a mixed n ∈ {32, 64, 100}
+    submission costs one device dispatch per distinct shape, not per
+    instance. Every other solver loops, across ``processes`` workers when
+    given. Worker processes start via forkserver/spawn once jax is loaded,
+    so scripts using ``processes`` need the standard
+    ``if __name__ == "__main__":`` guard.
     """
     options = options or SolveOptions()
-    mats, uniform = _as_stack(Ds)
+    mats = _as_stack(Ds)
     if not mats:
         return []
-    if solver == "spectra_jax" and uniform:
+    if solver == "spectra_jax":
         try:
             from .jax_backend import solve_many_jax
         except Exception:  # pragma: no cover - jax missing
             pass
         else:
-            return solve_many_jax(np.stack(mats), s, delta, options)
+            out: list[SolveReport | None] = [None] * len(mats)
+            for idxs in shape_buckets(mats).values():
+                reports = solve_many_jax(
+                    np.stack([mats[i] for i in idxs]), s, delta, options
+                )
+                for i, rep in zip(idxs, reports):
+                    out[i] = rep
+            return out  # type: ignore[return-value]
     work = [(D, s, delta, solver, options) for D in mats]
     if processes and processes > 1 and len(work) > 1:
         import multiprocessing as mp

@@ -89,16 +89,19 @@ def finish_report(
     extras: dict[str, Any] | None = None,
     makespan: float | None = None,
     num_configs: int | None = None,
+    lower_bound: float | None = None,
 ) -> SolveReport:
     """Validate + lower-bound a finished schedule into a SolveReport.
 
-    ``makespan``/``num_configs`` may be supplied by backends that already
-    computed them (e.g. on device, against a lazily-materialized schedule);
-    when omitted they are derived from ``schedule`` — which is also what
-    happens whenever validation runs, so the reported makespan always agrees
-    exactly with the schedule the validator (and simulator) saw.
+    ``makespan``/``num_configs``/``lower_bound`` may be supplied by backends
+    that already computed them (e.g. on device, against a lazily-materialized
+    schedule — the JAX backend attaches per-instance §IV bounds from the
+    fused batched call); when omitted they are derived on the host —
+    makespan from ``schedule``, which is also what happens whenever
+    validation runs, so the reported makespan always agrees exactly with the
+    schedule the validator (and simulator) saw.
     """
-    from ..core.lower_bounds import lower_bound
+    from ..core.lower_bounds import lower_bound as _host_lower_bound
 
     validated = False
     if options.validate:
@@ -108,11 +111,12 @@ def finish_report(
         makespan = schedule.makespan()
     if num_configs is None:
         num_configs = schedule.num_configs()
-    lb = (
-        lower_bound(problem.D, problem.s, problem.delta)
-        if options.compute_lb
-        else float("nan")
-    )
+    if not options.compute_lb:
+        lb = float("nan")
+    elif lower_bound is not None:
+        lb = float(lower_bound)
+    else:
+        lb = _host_lower_bound(problem.D, problem.s, problem.delta)
     return SolveReport(
         solver=solver,
         backend=backend,

@@ -3,10 +3,11 @@
 Everything here operates on dense, fixed-shape arrays — the
 ``repro.core.schedule_ir.DeviceSchedule`` IR — so each stage jits and vmaps:
 
-    auction        ε-scaling auction MWM (the DECOMPOSE inner solver)
-    decompose_jax  Alg. 1 + greedy REFINE; device LPT (Alg. 3) telemetry
-    equalize_jax   Alg. 4 (incl. merge-aware SPECTRA++) as lax.while_loop
-    e2e            fused DECOMPOSE → SCHEDULE → EQUALIZE, single device call
+    auction           ε-scaling auction MWM (the DECOMPOSE inner solver)
+    decompose_jax     Alg. 1 + greedy REFINE; device LPT (Alg. 3) telemetry
+    equalize_jax      Alg. 4 (incl. merge-aware SPECTRA++) as lax.while_loop
+    lower_bounds_jax  §IV bounds, vectorized over all 2n lines
+    e2e               fused DECOMPOSE → SCHEDULE → EQUALIZE (+ LB), one call
 """
 
 from .auction import auction_maximize, auction_maximize_batch
@@ -19,6 +20,7 @@ from .decompose_jax import (
 )
 from .e2e import E2EResult, spectra_jax_e2e, spectra_jax_e2e_many
 from .equalize_jax import equalize_ir, equalize_ir_jit, equalize_jax
+from .lower_bounds_jax import lower_bound_jax, lower_bounds_many
 
 __all__ = [
     "E2EResult",
@@ -29,6 +31,8 @@ __all__ = [
     "equalize_ir",
     "equalize_ir_jit",
     "equalize_jax",
+    "lower_bound_jax",
+    "lower_bounds_many",
     "lpt_schedule_jax",
     "spectra_jax",
     "spectra_jax_e2e",

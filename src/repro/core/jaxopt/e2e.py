@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from ..schedule_ir import DeviceSchedule
 from .decompose_jax import JaxDecomposition, decompose_jax, lpt_schedule_jax
 from .equalize_jax import device_loads, equalize_ir
+from .lower_bounds_jax import lower_bound_jax
 
 
 class E2EResult(NamedTuple):
@@ -30,6 +31,7 @@ class E2EResult(NamedTuple):
     lpt_makespan: jax.Array       # () float32 — Alg. 3 makespan before EQUALIZE
     eq_exhausted: jax.Array       # () bool — EQUALIZE ran out of split slots
                                   # (raise extra_slots; host parity not reached)
+    lb: jax.Array                 # () float32 — §IV lower bound of the instance
 
 
 def _ir_makespan(ds: DeviceSchedule, s: int) -> jax.Array:
@@ -80,6 +82,7 @@ def spectra_jax_e2e(
         makespan=_ir_makespan(ds, s),
         lpt_makespan=lpt_makespan,
         eq_exhausted=eq_exhausted,
+        lb=lower_bound_jax(D, s, delta),
     )
 
 

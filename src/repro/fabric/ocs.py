@@ -26,11 +26,17 @@ class OCSFabric:
     link_bandwidth_Bps: float = 400e9 / 8  # 400 Gb/s optical ports
 
     def normalize(self, demand_bytes: np.ndarray) -> tuple[np.ndarray, float]:
-        """Demand in bytes → time units; returns (D, seconds-per-unit)."""
+        """Demand in bytes → time units; returns (D, seconds-per-unit).
+
+        All-zero demand has no peak to scale by: the contract is
+        ``unit_s = 0.0`` with D returned as-is (all zeros), and every
+        downstream consumer must treat ``unit_s == 0.0`` as "nothing to
+        serve" — zero δ-in-units, zero CCT — rather than dividing by it.
+        """
         demand_bytes = np.asarray(demand_bytes, dtype=np.float64)
-        peak = float(demand_bytes.max())
+        peak = float(demand_bytes.max(initial=0.0))
         if peak <= 0:
-            return demand_bytes, 0.0
+            return np.zeros_like(demand_bytes), 0.0
         unit_s = peak / self.link_bandwidth_Bps
         return demand_bytes / peak, unit_s
 
@@ -53,6 +59,12 @@ class OCSFabric:
         the registry path, pass ``options=SolveOptions(...)`` — or legacy
         kwargs like ``validate=False`` / ``compute_lb=False``, which are
         mapped onto SolveOptions (anything else lands in ``extra``).
+
+        All-zero demand (``normalize`` → ``unit_s = 0.0``) is well-defined:
+        the solver sees the zero matrix with δ = 0 (no circuits needed, so
+        no reconfigurations either) and returns an empty zero-makespan
+        schedule; the CCT is exactly 0.0 seconds, never NaN/∞ from a δ/0
+        conversion.
         """
         D, unit_s = self.normalize(demand_bytes)
         delta = self.delta_units(unit_s) if unit_s > 0.0 else 0.0

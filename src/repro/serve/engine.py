@@ -8,12 +8,13 @@ decoding for ``max_new_tokens``. All steps run under a single jitted
 serve_step with a donated cache.
 
 ``SolverService`` — the scheduling half of the serving story: clients submit
-demand matrices (one per pod/job per controller period), the service groups
-same-shape instances and drains them through the unified
-``repro.api.solve_many``. On the JAX backend each group runs the *fused*
-DECOMPOSE→SCHEDULE→EQUALIZE pipeline in one vmapped device call (host
-schedules materialize lazily per ticket); numpy solvers loop, optionally
-across worker processes.
+demand matrices (one per pod/job per controller period) or whole
+``repro.scenarios`` demand traces (``submit_trace``: a training run's
+(T, n, n) stack, one ticket per period), the service groups same-shape
+instances and drains them through the unified ``repro.api.solve_many``. On
+the JAX backend each group runs the *fused* DECOMPOSE→SCHEDULE→EQUALIZE
+pipeline in one vmapped device call (host schedules materialize lazily per
+ticket); numpy solvers loop, optionally across worker processes.
 """
 
 from __future__ import annotations
@@ -114,31 +115,53 @@ class SolverService:
         self._queue.append((ticket, D))
         return ticket
 
+    def submit_trace(self, trace) -> list[int]:
+        """Enqueue a whole training run: one ticket per controller period.
+
+        ``trace`` is a ``repro.scenarios.DemandTrace`` (or anything with a
+        ``.demands`` stack, or a raw ``(T, n, n)`` array). All periods of a
+        trace share one shape, so a subsequent ``flush`` drains them — plus
+        anything else queued at that shape — through a single batched
+        ``solve_many`` group (one fused device call on the JAX backend).
+
+        The service's ``delta`` is in demand-time units, so byte-denominated
+        traces are rejected: normalize first (``trace.normalized()`` /
+        ``run_scenario``) rather than mixing byte magnitudes with a
+        units-denominated δ.
+        """
+        spec = getattr(trace, "spec", None)
+        if spec is not None and getattr(spec, "units", "demand") == "bytes":
+            raise ValueError(
+                "trace is denominated in bytes; normalize it to demand units "
+                "(DemandTrace.normalized or run_scenario) before submitting"
+            )
+        demands = np.asarray(getattr(trace, "demands", trace), dtype=np.float64)
+        if demands.ndim != 3 or demands.shape[1] != demands.shape[2]:
+            raise ValueError(
+                f"trace must be a (T, n, n) demand stack, got {demands.shape}"
+            )
+        return [self.submit(D) for D in demands]
+
     def flush(self) -> dict[int, SolveReport]:
         if not self._queue:
             return {}
-        groups: dict[tuple[int, ...], list[tuple[int, np.ndarray]]] = {}
-        for ticket, D in self._queue:
-            groups.setdefault(D.shape, []).append((ticket, D))
         pending, self._queue = self._queue, []
-        out: dict[int, SolveReport] = {}
         try:
-            for batch in groups.values():
-                reports = solve_many(
-                    [D for _, D in batch],
-                    self.s,
-                    self.delta,
-                    solver=self.solver,
-                    options=self.options,
-                    processes=self.processes,
-                )
-                for (ticket, _), rep in zip(batch, reports):
-                    out[ticket] = rep
+            # solve_many shape-buckets ragged submissions itself (one fused
+            # device call per distinct shape on the JAX backend) and returns
+            # reports in submission order.
+            reports = solve_many(
+                [D for _, D in pending],
+                self.s,
+                self.delta,
+                solver=self.solver,
+                options=self.options,
+                processes=self.processes,
+            )
         except Exception:
             # One bad matrix must not drop the other pods' requests. Nothing
-            # from this flush has been delivered (the raise discards `out`,
-            # including groups that already solved), so every submission goes
+            # from this flush has been delivered, so every submission goes
             # back on the queue to be re-solved by the next flush.
             self._queue = list(pending) + self._queue
             raise
-        return out
+        return {ticket: rep for (ticket, _), rep in zip(pending, reports)}

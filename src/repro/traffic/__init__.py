@@ -1,0 +1,39 @@
+"""Traffic generators behind the scenario registry.
+
+The callables here build *one* demand matrix; the front door for
+time-varying traffic is ``repro.scenarios``, whose registered scenario
+names ("gpt", "moe", "benchmark", "collective_ring", …) wrap these
+generators into declarative ``TrafficSpec``s and materialize whole
+``(T, n, n)`` ``DemandTrace``s — the shape the batched solver and the
+benchmarks consume. Reach for these functions directly only when you need a
+single matrix outside any scenario.
+"""
+
+from .collectives import (
+    Placement,
+    TrafficModel,
+    add_noise,
+    normalize_max_line,
+    sinkhorn,
+)
+from .hlo_traffic import demand_from_collectives, schedule_cell_demand
+from .workloads import (
+    WORKLOADS,
+    benchmark_workload,
+    gpt3b_workload,
+    moe_workload,
+)
+
+__all__ = [
+    "Placement",
+    "TrafficModel",
+    "WORKLOADS",
+    "add_noise",
+    "benchmark_workload",
+    "demand_from_collectives",
+    "gpt3b_workload",
+    "moe_workload",
+    "normalize_max_line",
+    "schedule_cell_demand",
+    "sinkhorn",
+]

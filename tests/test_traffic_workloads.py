@@ -106,6 +106,27 @@ def test_ocs_fabric_seconds_conversion():
     assert res.makespan == pytest.approx(0.25 + 1e-6, rel=1e-5)
 
 
+def test_schedule_bytes_all_zero_demand():
+    # Regression: all-zero demand must flow through normalize → solve → CCT
+    # with well-defined zeros everywhere, not NaN/∞ from the δ/unit_s math.
+    from repro.fabric.simulator import simulate
+
+    fabric = OCSFabric(num_switches=4, reconfig_delay_s=10e-6)
+    zeros = np.zeros((8, 8))
+    D, unit_s = fabric.normalize(zeros)
+    assert unit_s == 0.0
+    assert (D == 0).all()
+    assert fabric.delta_units(unit_s) == 0.0
+    res, cct = fabric.schedule_bytes(zeros)
+    assert cct == 0.0
+    assert res.makespan == 0.0
+    assert res.num_configs == 0
+    assert res.validated
+    assert res.optimality_gap == 1.0  # degenerate 0/0 pins to 1.0
+    sim = simulate(res, zeros)
+    assert sim.demand_met and sim.finish_time == 0.0
+
+
 def test_normalize_and_noise_helpers():
     rng = np.random.default_rng(0)
     D = rng.random((6, 6))
