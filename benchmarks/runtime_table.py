@@ -3,7 +3,10 @@
 Paper reports 1–14 ms on a 3.7 GHz Threadripper; we report mean/p95 for the
 host path plus a batched-device column: a whole stack of demand matrices
 through the fused DECOMPOSE→SCHEDULE→EQUALIZE JAX call (one vmapped device
-dispatch), amortized per instance.
+dispatch), amortized per instance, and a device-vs-host quality column
+(geomean of per-instance makespan ratios on the same matrices). The n-aware
+matcher ε-schedule keeps per-dispatch cost bounded at n ≥ 64, so the device
+column now runs at every workload size even under FAST.
 """
 
 from __future__ import annotations
@@ -15,27 +18,34 @@ import numpy as np
 from .common import FAST, OUT_DIR, write_csv
 
 
-def _batched_device_ms(scenario: str, s: int, delta: float, B: int):
-    """Per-instance ms for one fused vmapped device call over B matrices.
+def _batched_device(scenario: str, s: int, delta: float, B: int):
+    """(per-instance ms, geomean device/host makespan ratio) for one fused
+    vmapped device call over B matrices.
 
     One timed repetition after the compile warmup: on CPU hosts the device
-    auction loop dominates (seconds per large fabric), so a single steady
-    dispatch is the honest, affordable sample.
+    matcher loop dominates, so a single steady dispatch is the honest,
+    affordable sample. The quality ratio reuses the warmup call's reports
+    against per-instance host solves of the same matrices.
     """
     try:
-        from repro.api import SolveOptions, solve_many
+        from repro.api import Problem, SolveOptions, solve, solve_many
         from repro.scenarios import make_trace
     except Exception:  # pragma: no cover - jax missing
-        return None
+        return None, None
     opts = SolveOptions(validate=False, compute_lb=False)
     Ds = make_trace(scenario, periods=B, seed=1000).demands
     try:
-        solve_many(Ds, s, delta, solver="spectra_jax", options=opts)  # compile
+        reports = solve_many(Ds, s, delta, solver="spectra_jax", options=opts)
     except Exception:  # pragma: no cover - jax missing / no device
-        return None
+        return None, None
+    ratios = []
+    for D, rep in zip(Ds, reports):
+        host = solve(Problem(D, s, delta), solver="spectra", options=opts)
+        ratios.append(rep.makespan / host.makespan)
+    quality = float(np.exp(np.mean(np.log(ratios))))
     t0 = time.perf_counter()
     solve_many(Ds, s, delta, solver="spectra_jax", options=opts)
-    return 1e3 * (time.perf_counter() - t0) / B
+    return 1e3 * (time.perf_counter() - t0) / B, quality
 
 
 def run():
@@ -58,14 +68,7 @@ def run():
             times.append(time.perf_counter() - t0)
         mean_ms = 1e3 * float(np.mean(times))
         p95_ms = 1e3 * float(np.percentile(times, 95))
-        # FAST keeps the device column to the small fabric; the big ones cost
-        # minutes of CPU-backend auction iterations per dispatch.
-        n = len(D)
-        dev_ms = (
-            _batched_device_ms(scenario, s, 0.01, batch)
-            if (not FAST or n <= 32)
-            else None
-        )
+        dev_ms, quality = _batched_device(scenario, s, 0.01, batch)
         rows.append(
             {
                 "workload": wname,
@@ -74,12 +77,18 @@ def run():
                 "batched_device_ms_per_instance": (
                     float("nan") if dev_ms is None else dev_ms
                 ),
+                "device_quality_vs_host": (
+                    float("nan") if quality is None else quality
+                ),
                 "batch_size": batch,
             }
         )
         derived = f"p95_ms={p95_ms:.1f}"
         if dev_ms is not None:
-            derived += f" batched_device_ms/inst={dev_ms:.2f} (B={batch})"
+            derived += (
+                f" batched_device_ms/inst={dev_ms:.2f} (B={batch})"
+                f" quality_vs_host={quality:.3f}"
+            )
         out.append(
             {
                 "name": f"runtime_{wname}",

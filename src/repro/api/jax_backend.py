@@ -11,7 +11,10 @@ path never loops over instances on the host.
 
 ``SolveOptions.extra`` knobs: ``use_kernel`` (Pallas top-2 reduction),
 ``equalize`` (default True), ``merge_aware`` (SPECTRA++ merge-aware device
-EQUALIZE), ``extra_slots`` (EQUALIZE split headroom, default 64).
+EQUALIZE), ``extra_slots`` (EQUALIZE split headroom, default 64),
+``matcher`` (device MWM solver name from ``core.jaxopt.matching.MATCHERS``,
+default ``"auction"``), ``repair_rounds`` (post-REFINE device local-search
+sweeps, default 0 = paper-faithful Alg. 1+2).
 """
 
 from __future__ import annotations
@@ -35,6 +38,8 @@ def _e2e_kwargs(options: SolveOptions) -> dict:
         do_equalize=bool(options.extra.get("equalize", True)),
         merge_aware=bool(options.extra.get("merge_aware", False)),
         extra_slots=int(options.extra.get("extra_slots", 64)),
+        matcher=str(options.extra.get("matcher", "auction")),
+        repair_rounds=int(options.extra.get("repair_rounds", 0)),
     )
 
 
@@ -72,9 +77,20 @@ class _LazyDecomposition(Decomposition):
 class _HostBatch:
     """One device→host transfer for a whole fused batch, shared by B reports."""
 
-    def __init__(self, res: E2EResult, delta: float, *, merge_aware: bool = False):
+    def __init__(
+        self,
+        res: E2EResult,
+        delta: float,
+        *,
+        merge_aware: bool = False,
+        matcher: str = "auction",
+        repair_rounds: int = 0,
+        **_ignored,
+    ):
         sched = res.schedule
         self.merge_aware = merge_aware
+        self.matcher = matcher
+        self.repair_rounds = repair_rounds
         self.perms = np.asarray(sched.perms)
         self.alphas = np.asarray(sched.alphas, dtype=np.float64)
         self.switch = np.asarray(sched.switch)
@@ -133,15 +149,35 @@ class _HostBatch:
         lazy = LazySchedule(self.schedule_thunk(b, problem.s), self.delta)
         device_makespan = float(self.makespans[b])
         exhausted = bool(self.eq_exhausted[b])
+        converged = bool(self.converged[b])
+        # Warning-bearing surface: device-side degradations that would
+        # otherwise hide in telemetry booleans. Consumers can gate on
+        # ``extras["warnings"]`` without knowing each flag.
+        warnings: list[str] = []
+        if not converged:
+            warnings.append(
+                f"device matcher {self.matcher!r} exhausted its iteration "
+                "budget (JaxDecomposition.converged=False); the matching — "
+                "and the decomposition built on it — may be suboptimal"
+            )
+        if exhausted:
+            warnings.append(
+                "device EQUALIZE ran out of split headroom (raise "
+                "options.extra['extra_slots']); host EQUALIZE finished the "
+                "schedule at materialization"
+            )
         all_extras = {
             "k": int(self.k[b]),
-            "converged": bool(self.converged[b]),
+            "converged": converged,
+            "matcher": self.matcher,
+            "repair_rounds": self.repair_rounds,
             "device_makespan": device_makespan,
             "device_lpt_makespan": float(self.lpt_makespans[b]),
             # True when device EQUALIZE ran out of split headroom before the
             # ≤δ spread (raise options.extra["extra_slots"]); the schedule
             # thunk finishes with host EQUALIZE, so metrics come from it.
             "eq_exhausted": exhausted,
+            "warnings": warnings,
         }
         all_extras.update(extras or {})
         return finish_report(
@@ -176,9 +212,7 @@ def solve_spectra_jax(problem: Problem, options: SolveOptions) -> SolveReport:
     jax.block_until_ready(res.makespan)
     runtime_s = time.perf_counter() - t0
     batch = _HostBatch(
-        jax.tree_util.tree_map(lambda x: x[None], res),
-        problem.delta,
-        merge_aware=kwargs["merge_aware"],
+        jax.tree_util.tree_map(lambda x: x[None], res), problem.delta, **kwargs
     )
     return batch.report(0, problem, options, runtime_s, device_lb=False)
 
@@ -205,7 +239,7 @@ def solve_many_jax(
     jax.block_until_ready(res.makespan)
     device_s = time.perf_counter() - t0
     B = mats.shape[0]
-    batch = _HostBatch(res, delta, merge_aware=kwargs["merge_aware"])
+    batch = _HostBatch(res, delta, **kwargs)
     return [
         batch.report(
             b,

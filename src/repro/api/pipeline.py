@@ -32,9 +32,41 @@ DecomposeFn = Callable[..., Decomposition]        # (problem, **kw) -> dec
 ScheduleFn = Callable[..., ParallelSchedule]      # (dec, problem, **kw) -> sched
 EqualizeFn = Callable[..., ParallelSchedule]      # (sched, problem, **kw) -> sched
 
+def _decompose_jax_stage(
+    problem,
+    *,
+    matcher: str = "auction",
+    repair_rounds: int = 0,
+    use_kernel: bool = False,
+    **kw,
+):
+    # Imported lazily so the numpy stage tables never pay for (or require)
+    # jax; the device decomposition materializes to a host Decomposition.
+    import jax.numpy as jnp
+    import numpy as np
+
+    from ..core.jaxopt.decompose_jax import decompose_jax, to_decomposition
+
+    dec = decompose_jax(
+        jnp.asarray(np.asarray(problem.D), jnp.float32),
+        matcher=matcher,
+        repair_rounds=repair_rounds,
+        use_kernel=use_kernel,
+        **kw,
+    )
+    return to_decomposition(dec)
+
+
 DECOMPOSERS: dict[str, DecomposeFn] = {
     "spectra": lambda problem, **kw: decompose(problem.D, **kw),
     "eclipse": lambda problem, **kw: eclipse_decompose(problem.D, problem.delta, **kw),
+    # Device decompositions (materialized to host for the numpy stages):
+    # jax_auction is the paper-faithful Alg. 1+2 on the device matcher;
+    # jax_refined adds the bounded post-REFINE local-search sweeps.
+    "jax_auction": _decompose_jax_stage,
+    "jax_refined": lambda problem, **kw: _decompose_jax_stage(
+        problem, **{"repair_rounds": 2, **kw}
+    ),
 }
 
 SCHEDULERS: dict[str, ScheduleFn] = {

@@ -3,14 +3,25 @@
 Everything here operates on dense, fixed-shape arrays — the
 ``repro.core.schedule_ir.DeviceSchedule`` IR — so each stage jits and vmaps:
 
-    auction           ε-scaling auction MWM (the DECOMPOSE inner solver)
-    decompose_jax     Alg. 1 + greedy REFINE; device LPT (Alg. 3) telemetry
+    matching          pluggable device MWM matchers (MATCHERS registry:
+                      ε-scaling auction + forward-reverse auction)
+    auction           legacy entry point for the "auction" matcher
+    decompose_jax     Alg. 1 + greedy REFINE + optional repair sweeps;
+                      device LPT (Alg. 3) telemetry
     equalize_jax      Alg. 4 (incl. merge-aware SPECTRA++) as lax.while_loop
     lower_bounds_jax  §IV bounds, vectorized over all 2n lines
     e2e               fused DECOMPOSE → SCHEDULE → EQUALIZE (+ LB), one call
 """
 
 from .auction import auction_maximize, auction_maximize_batch
+from .matching import (
+    MATCHERS,
+    get_matcher,
+    list_matchers,
+    match_auction,
+    match_auction_fr,
+    register_matcher,
+)
 from .decompose_jax import (
     JaxDecomposition,
     decompose_jax,
@@ -25,9 +36,15 @@ from .lower_bounds_jax import lower_bound_jax, lower_bounds_many
 __all__ = [
     "E2EResult",
     "JaxDecomposition",
+    "MATCHERS",
     "auction_maximize",
     "auction_maximize_batch",
     "decompose_jax",
+    "get_matcher",
+    "list_matchers",
+    "match_auction",
+    "match_auction_fr",
+    "register_matcher",
     "equalize_ir",
     "equalize_ir_jit",
     "equalize_jax",

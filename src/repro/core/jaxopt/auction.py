@@ -1,111 +1,49 @@
-"""Batched ε-scaling auction algorithm for max-weight assignment, in JAX.
+"""Batched ε-scaling auction for max-weight assignment (legacy entry point).
 
-TPU adaptation of SPECTRA's Hungarian/JV matching step (DESIGN.md §4):
-JV's shortest augmenting path is inherently sequential, while Bertsekas'
-auction exposes per-row parallelism — every unassigned row bids at once
-(Jacobi variant), each column keeps the best bid. All state is dense
-``(n,)``/``(n, n)`` arrays updated with masked vector ops inside
-``lax.while_loop``, so the whole solver jits and ``vmap``s over batches of
-matrices (one TPU core scheduling many demand matrices concurrently).
-
-Guarantee: with ε-scaling down to ``eps_final``, the assignment is within
-``n·eps_final`` of optimal (exact for integer weights if eps_final < 1/n).
-The node-coverage constraint of DECOMPOSE survives unchanged because it is
-encoded purely in the weights (M-bonus), and M dominates ``n·eps_final``.
+The implementation moved to :mod:`repro.core.jaxopt.matching`, which packages
+this forward auction plus a combined forward-reverse variant behind a small
+``MATCHERS`` registry with an n- and spread-aware ε-schedule. This module
+keeps the original call surface: ``auction_maximize(W)`` is the registry's
+``"auction"`` matcher with its n-aware defaults.
 """
 
 from __future__ import annotations
 
-import functools
-
 import jax
-import jax.numpy as jnp
 
-_NEG = -1e30
+from .matching import MATCHERS, get_matcher, list_matchers, match_auction
 
-
-def _bid_step(W, row2col, col2row, prices, eps, use_kernel: bool):
-    """One parallel bidding round: all unassigned rows bid, columns take max."""
-    n = W.shape[0]
-    arange = jnp.arange(n)
-    unassigned = row2col < 0
-    if use_kernel:
-        from ...kernels.auction_bid.ops import masked_row_top2
-
-        v1, v2, j1 = masked_row_top2(W, prices)
-    else:
-        from ...kernels.auction_bid.ref import masked_row_top2_ref
-
-        v1, v2, j1 = masked_row_top2_ref(W, prices)
-    # Row i's bid for its favorite column j1[i].
-    bid = jnp.where(unassigned, W[arange, j1] - v2 + eps, _NEG)
-    # Columns take the best bid (scatter-max via a dense (n, n) mask).
-    B = jnp.full((n, n), _NEG, W.dtype).at[arange, j1].set(bid)
-    col_best = B.max(axis=0)
-    col_winner = B.argmax(axis=0)
-    has_bid = col_best > _NEG / 2
-    # Kick out previous owners of re-auctioned columns.
-    kicked = jnp.where(has_bid & (col2row >= 0), col2row, n)
-    row2col = row2col.at[kicked].set(-1, mode="drop")
-    # Install winners.
-    winner = jnp.where(has_bid, col_winner, n)
-    row2col = row2col.at[winner].set(jnp.where(has_bid, arange, -1), mode="drop")
-    col2row = jnp.where(has_bid, col_winner, col2row)
-    prices = jnp.where(has_bid, col_best, prices)
-    return row2col, col2row, prices
+_NEG = -1e30  # re-exported for back-compat
 
 
-@functools.partial(jax.jit, static_argnames=("num_phases", "max_iters", "use_kernel"))
 def auction_maximize(
     W: jax.Array,
     *,
-    num_phases: int = 8,
-    max_iters: int = 10_000,
+    num_phases: int | None = None,
+    max_iters: int | None = None,
     use_kernel: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
     """Max-weight assignment of square matrix W.
 
     Returns ``(perm, converged)`` with ``perm[i] = j``. ``use_kernel=True``
-    routes the bid top-2 reduction through the Pallas kernel.
+    routes the bid top-2 reduction through the Pallas kernel. ``num_phases``
+    and ``max_iters`` default to the n-aware schedule of
+    :mod:`repro.core.jaxopt.matching`.
     """
-    W = W.astype(jnp.float32)
-    n = W.shape[0]
-    wmax = jnp.maximum(jnp.abs(W).max(), 1e-12)
-    eps_final = wmax * 1e-6 / n
-
-    def phase(state, eps):
-        row2col, col2row, prices = state
-        # Each phase restarts the assignment but keeps learned prices.
-        row2col = jnp.full((n,), -1, jnp.int32)
-        col2row = jnp.full((n,), -1, jnp.int32)
-
-        def cond(c):
-            row2col, _, _, it = c
-            return (row2col < 0).any() & (it < max_iters)
-
-        def body(c):
-            row2col, col2row, prices, it = c
-            row2col, col2row, prices = _bid_step(
-                W, row2col, col2row, prices, eps, use_kernel
-            )
-            return row2col, col2row, prices, it + 1
-
-        row2col, col2row, prices, _ = jax.lax.while_loop(
-            cond, body, (row2col, col2row, prices, 0)
-        )
-        return (row2col, col2row, prices), None
-
-    prices0 = jnp.zeros((n,), jnp.float32)
-    state = (jnp.full((n,), -1, jnp.int32), jnp.full((n,), -1, jnp.int32), prices0)
-    # ε schedule: wmax/2 → eps_final, geometric.
-    ratio = (eps_final / (wmax / 2.0)) ** (1.0 / max(num_phases - 1, 1))
-    eps_sched = (wmax / 2.0) * ratio ** jnp.arange(num_phases)
-    state, _ = jax.lax.scan(phase, state, eps_sched)
-    row2col, _, _ = state
-    converged = (row2col >= 0).all()
-    return row2col, converged
+    return match_auction(
+        W, num_phases=num_phases, max_iters=max_iters, use_kernel=use_kernel
+    )
 
 
 def auction_maximize_batch(W: jax.Array, **kw) -> tuple[jax.Array, jax.Array]:
     """vmap'd auction over a batch of matrices (B, n, n) → (B, n)."""
     return jax.vmap(lambda w: auction_maximize(w, **kw))(W)
+
+
+__all__ = [
+    "MATCHERS",
+    "auction_maximize",
+    "auction_maximize_batch",
+    "get_matcher",
+    "list_matchers",
+]

@@ -3,9 +3,18 @@
 Mirrors ``repro.core.decompose``/``schedule`` with dense array state inside
 ``lax.while_loop``/``scan`` so the controller's scheduling computation can run
 on the accelerator itself and be ``vmap``-ed over batches of demand matrices
-(DESIGN.md §4). The constrained MWM uses the ε-scaling auction solver; the
-node-coverage constraint is encoded in the weights (M-bonus), exactly as in
-the numpy path.
+(DESIGN.md §4). The constrained MWM goes through a pluggable device matcher
+(:mod:`repro.core.jaxopt.matching` — ε-scaling auction by default, selectable
+via ``matcher=``); the node-coverage constraint is encoded in the weights
+(M-bonus), exactly as in the numpy path.
+
+Beyond Alg. 1+2, ``repair_rounds > 0`` enables a bounded device local-search
+pass after the greedy REFINE: repeated shrink sweeps re-extract α mass that
+REFINE over-provisioned (each sweep lowers every α by the minimum coverage
+slack along its permutation), so one weak matching round no longer
+permanently inflates the decomposition's total weight. Rounds whose α
+shrinks to zero are compacted to the tail and dropped from ``k`` — they
+would otherwise still cost δ in the schedule.
 
 EQUALIZE runs on device too: the decomposition and LPT assignment produced
 here feed the dense ``repro.core.schedule_ir.DeviceSchedule`` slot table, on
@@ -24,7 +33,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .auction import auction_maximize
+from .matching import get_matcher
 from ..decompose import Decomposition
 
 
@@ -32,12 +41,26 @@ class JaxDecomposition(NamedTuple):
     perms: jax.Array   # (n, n) int32; row r = permutation of round r (padded)
     alphas: jax.Array  # (n,) float32; 0 for padded rounds
     k: jax.Array       # () int32: number of real rounds
-    converged: jax.Array  # () bool: all auctions converged
+    converged: jax.Array  # () bool: all matcher calls converged
 
 
-@functools.partial(jax.jit, static_argnames=("use_kernel",))
-def decompose_jax(D: jax.Array, *, use_kernel: bool = False) -> JaxDecomposition:
-    """Exactly-k decomposition of D (Alg. 1 + greedy REFINE), on device."""
+@functools.partial(
+    jax.jit, static_argnames=("use_kernel", "matcher", "repair_rounds")
+)
+def decompose_jax(
+    D: jax.Array,
+    *,
+    use_kernel: bool = False,
+    matcher: str = "auction",
+    repair_rounds: int = 0,
+) -> JaxDecomposition:
+    """Exactly-k decomposition of D (Alg. 1 + greedy REFINE), on device.
+
+    ``matcher`` picks the device MWM solver from ``matching.MATCHERS``;
+    ``repair_rounds`` bounds the post-REFINE local-search sweeps (0 keeps
+    the paper-faithful Alg. 1+2 output bit-for-bit).
+    """
+    match = get_matcher(matcher)
     D = D.astype(jnp.float32)
     n = D.shape[0]
     arange = jnp.arange(n)
@@ -54,10 +77,18 @@ def decompose_jax(D: jax.Array, *, use_kernel: bool = False) -> JaxDecomposition
         crit_r = (row_deg == k) & (k > 0)
         crit_c = (col_deg == k) & (k > 0)
         base = jnp.maximum(D_rem, 0.0)
-        M = base.sum() + 1.0
+        # Dominance constant: any permutation serves at most the sum of row
+        # maxima, so this M already forces the max bonus count. (Tighter
+        # than sum(D)+1: auction prices scale with M, and float32 price
+        # resolution — hence matcher convergence — improves as M shrinks.)
+        # The bonus-level separation must dominate the matcher's n·ε
+        # optimality slack, which scales with the weight magnitude (ε is
+        # ulp-floored at wmax·2⁻²², wmax ≤ 3M) — hence the relative margin
+        # on top of the absolute +1.
+        M = (base.max(axis=1).sum() + 1.0) * (1.0 + n * 2.0**-19)
         bonus = M * (crit_r[:, None].astype(jnp.float32) + crit_c[None, :])
         W = base + jnp.where(S_rem, bonus, 0.0)
-        perm, ok = auction_maximize(W, use_kernel=use_kernel)
+        perm, ok = match(W, use_kernel=use_kernel)
         newly = S_rem[arange, perm]
         # α = min D_rem over *newly covered* support, exactly the numpy
         # "covered_support" rule: a round that newly covers nothing gets α=0
@@ -80,14 +111,14 @@ def decompose_jax(D: jax.Array, *, use_kernel: bool = False) -> JaxDecomposition
     )
     D_rem, S_rem, perms, alphas, k, conv = jax.lax.while_loop(cond, body, init)
 
+    cov_idx = (jnp.broadcast_to(arange[None, :], (n, n)), perms)
+    round_live = (jnp.arange(n) < k)[:, None]
+
+    def coverage(al):
+        return jnp.zeros_like(D).at[cov_idx].add(al[:, None] * round_live)
+
     # Greedy REFINE (Alg. 2) over all rounds (padded rounds see zero residual).
-    R0 = D - (
-        jnp.zeros_like(D)
-        .at[jnp.broadcast_to(arange[None, :], (n, n)), perms]
-        .add(alphas[:, None] * (jnp.arange(n) < k)[:, None])
-    )
-    # Note: scatter above adds alpha_r at (row, perms[r, row]) for each round.
-    R0 = jnp.maximum(R0, 0.0)
+    R0 = jnp.maximum(D - coverage(alphas), 0.0)
 
     def refine_body(r, carry):
         R, alphas = carry
@@ -100,14 +131,61 @@ def decompose_jax(D: jax.Array, *, use_kernel: bool = False) -> JaxDecomposition
         return R, alphas
 
     _, alphas = jax.lax.fori_loop(0, n, refine_body, (R0, alphas))
+
+    if repair_rounds:
+        perms, alphas, k = _repair(
+            D, perms, alphas, k, coverage, repair_rounds
+        )
     return JaxDecomposition(perms=perms, alphas=alphas, k=k, converged=conv)
+
+
+def _repair(D, perms, alphas, k, coverage, repair_rounds: int):
+    """Bounded local search on the refined weights (2-opt α re-extraction).
+
+    REFINE only ever raises weights, so entries covered by several rounds
+    end up over-provisioned. Each sweep walks the rounds and shrinks α_r by
+    the minimum slack ``(Σ α P − D)`` along its permutation — the largest
+    reduction that keeps coverage — wrapping the freed mass back into the
+    makespan. Sweeps repeat (bounded by ``repair_rounds``) until a full
+    pass changes nothing; rounds whose α hits zero are compacted to the
+    tail and dropped from ``k`` so they stop costing δ.
+    """
+    n = D.shape[0]
+    arange = jnp.arange(n)
+
+    def sweep(carry):
+        alphas, rounds_left, improved = carry
+        slack = coverage(alphas) - D
+
+        def one(r, c):
+            slack, al = c
+            perm = perms[r]
+            d = jnp.minimum(slack[arange, perm].min(), al[r])
+            d = jnp.where(r < k, jnp.maximum(d, 0.0), 0.0)
+            al = al.at[r].add(-d)
+            slack = slack.at[arange, perm].add(-d)
+            return slack, al
+
+        _, new = jax.lax.fori_loop(0, n, one, (slack, alphas))
+        return new, rounds_left - 1, (new < alphas).any()
+
+    alphas, _, _ = jax.lax.while_loop(
+        lambda c: c[2] & (c[1] > 0),
+        sweep,
+        (alphas, jnp.int32(repair_rounds), jnp.bool_(True)),
+    )
+    # Compact: live rounds (α > 0) first in original order; dead rounds
+    # join the padding so LPT/EQUALIZE slot accounting stays contiguous.
+    live = (alphas > 0) & (jnp.arange(n) < k)
+    order = jnp.argsort(~live, stable=True)
+    return perms[order], jnp.where(live, alphas, 0.0)[order], live.sum()
 
 
 @functools.partial(jax.jit, static_argnames=("s",))
 def lpt_schedule_jax(dec: JaxDecomposition, s: int, delta: jax.Array):
     """Alg. 3 on device: returns (assignment (n,), loads (s,), makespan)."""
     n = dec.alphas.shape[0]
-    valid = jnp.arange(n) < dec.k
+    valid = (jnp.arange(n) < dec.k) & (dec.alphas > 0)
     order = jnp.argsort(jnp.where(valid, -dec.alphas, jnp.inf))
 
     def place(loads, idx):
@@ -124,19 +202,36 @@ def lpt_schedule_jax(dec: JaxDecomposition, s: int, delta: jax.Array):
     return assignment, loads, loads.max()
 
 
-def spectra_jax(D: jax.Array, s: int, delta: float, *, use_kernel: bool = False):
+def spectra_jax(
+    D: jax.Array,
+    s: int,
+    delta: float,
+    *,
+    use_kernel: bool = False,
+    matcher: str = "auction",
+    repair_rounds: int = 0,
+):
     """DECOMPOSE + LPT on device; returns (dec, assignment, loads, makespan)."""
-    dec = decompose_jax(D, use_kernel=use_kernel)
+    dec = decompose_jax(
+        D, use_kernel=use_kernel, matcher=matcher, repair_rounds=repair_rounds
+    )
     assignment, loads, makespan = lpt_schedule_jax(dec, s, jnp.float32(delta))
     return dec, assignment, loads, makespan
 
 
 def to_decomposition(dec: JaxDecomposition) -> Decomposition:
-    """Materialize on host as a numpy Decomposition (for EQUALIZE etc.)."""
+    """Materialize on host as a numpy Decomposition (for EQUALIZE etc.).
+
+    Zero-α rounds (possible after repair) are dropped — they carry no
+    weight and would only add δ-cost configs to a host schedule.
+    """
     import numpy as np
 
     k = int(dec.k)
     perms = np.asarray(dec.perms)[:k]
     alphas = np.asarray(dec.alphas)[:k]
-    return Decomposition(perms=[p.astype(np.int64) for p in perms],
-                         alphas=[float(a) for a in alphas])
+    keep = alphas > 0
+    return Decomposition(
+        perms=[p.astype(np.int64) for p, kp in zip(perms, keep) if kp],
+        alphas=[float(a) for a, kp in zip(alphas, keep) if kp],
+    )

@@ -40,7 +40,10 @@ def _ir_makespan(ds: DeviceSchedule, s: int) -> jax.Array:
 
 @functools.partial(
     jax.jit,
-    static_argnames=("s", "use_kernel", "do_equalize", "merge_aware", "extra_slots"),
+    static_argnames=(
+        "s", "use_kernel", "do_equalize", "merge_aware", "extra_slots",
+        "matcher", "repair_rounds",
+    ),
 )
 def spectra_jax_e2e(
     D: jax.Array,
@@ -51,16 +54,22 @@ def spectra_jax_e2e(
     do_equalize: bool = True,
     merge_aware: bool = False,
     extra_slots: int = 64,
+    matcher: str = "auction",
+    repair_rounds: int = 0,
 ) -> E2EResult:
     """Full SPECTRA pipeline for one (n, n) demand matrix, entirely on device.
 
     ``extra_slots`` is the EQUALIZE split headroom appended to the n
     decomposition slots (each non-merging split consumes one slot).
+    ``matcher`` selects the device MWM solver (``matching.MATCHERS``);
+    ``repair_rounds`` bounds the post-REFINE local-search sweeps.
     """
     D = jnp.asarray(D, jnp.float32)
     n = D.shape[0]
     delta = jnp.asarray(delta, jnp.float32)
-    dec = decompose_jax(D, use_kernel=use_kernel)
+    dec = decompose_jax(
+        D, use_kernel=use_kernel, matcher=matcher, repair_rounds=repair_rounds
+    )
     assignment, _, lpt_makespan = lpt_schedule_jax(dec, s, delta)
     pad_perms = jnp.broadcast_to(
         jnp.arange(n, dtype=jnp.int32)[None, :], (extra_slots, n)
@@ -88,7 +97,10 @@ def spectra_jax_e2e(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("s", "use_kernel", "do_equalize", "merge_aware", "extra_slots"),
+    static_argnames=(
+        "s", "use_kernel", "do_equalize", "merge_aware", "extra_slots",
+        "matcher", "repair_rounds",
+    ),
 )
 def spectra_jax_e2e_many(
     Ds: jax.Array,
@@ -99,6 +111,8 @@ def spectra_jax_e2e_many(
     do_equalize: bool = True,
     merge_aware: bool = False,
     extra_slots: int = 64,
+    matcher: str = "auction",
+    repair_rounds: int = 0,
 ) -> E2EResult:
     """vmapped fused pipeline over stacked (B, n, n) demand matrices."""
     Ds = jnp.asarray(Ds, jnp.float32)
@@ -111,5 +125,7 @@ def spectra_jax_e2e_many(
             do_equalize=do_equalize,
             merge_aware=merge_aware,
             extra_slots=extra_slots,
+            matcher=matcher,
+            repair_rounds=repair_rounds,
         )
     )(Ds)

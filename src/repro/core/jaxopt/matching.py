@@ -1,0 +1,289 @@
+"""Pluggable device matchers: max-weight assignment solvers for DECOMPOSE.
+
+This is the device counterpart of :mod:`repro.core.matching` — the inner
+solver of SPECTRA's DECOMPOSE step — packaged as a small registry of
+jittable, ``vmap``-able matchers sharing one bidding engine:
+
+    auction      ε-scaling forward auction (Bertsekas, Jacobi variant):
+                 every unassigned row bids at once, columns keep the best
+                 bid. The default — fastest on the paper workloads.
+    auction_fr   combined forward-reverse auction (Bertsekas-Castañón):
+                 alternates row-side and column-side bidding rounds,
+                 switching sides whenever the assignment grows. Dual-side
+                 bidding breaks the one-sided price wars that sparse
+                 large-n instances can trigger, at ~2 top-2 reductions per
+                 round.
+
+Both share the Pallas ``kernels/auction_bid`` top-2 reduction via
+``use_kernel`` (the reverse rounds call it on ``W.T``).
+
+The ε-schedule is n- and spread-aware. Two failure modes of a fixed
+schedule, both observed at the paper's n=100 benchmark workload:
+
+* **float32 price livelock** — with the node-coverage M-bonus folded into
+  the weights, prices climb to ~``wmax``; once ε drops below the float32
+  ulp at that magnitude, ``price + ε`` is a no-op and bidding loops
+  forever (this alone produced the 1.36× quality gap: the matcher timed
+  out, returned partial assignments, and DECOMPOSE inflated k from 16
+  to 20). ``eps_floor`` pins the final ε at 2 ulps of ``wmax``.
+* **phase-budget starvation** — 8 phases spanning ``wmax/2 → wmax·1e-6/n``
+  shrink ε ~13× per phase at n=100, so late phases need thousands of
+  bidding rounds. The phase count now grows with n so each phase refines
+  ε by a bounded factor.
+
+Matchers return ``(perm, converged)``. ``perm`` is always a valid
+permutation: if the iteration budget is exhausted, leftover rows are paired
+with leftover columns greedily (rank order) rather than returning ``-1``
+sentinels — a ``-1`` silently corrupts downstream gathers — and
+``converged=False`` reports the quality loss.
+
+Optimality: with ε-scaling down to ``eps_final``, the assignment is within
+``n·eps_final`` of the max weight (exact for integer weights when
+``eps_final < 1/n``). The node-coverage constraint survives because the
+M-bonus dominates ``n·eps_final``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+_NEG = -1e30
+
+# float32 prices saturate once ε < ulp(price); prices reach ~wmax, whose
+# ulp is wmax·2^-23..2^-24 — floor ε at two ulps so increments always land.
+_EPS_FLOOR = 2.0**-22
+
+
+def default_num_phases(n: int) -> int:
+    """n-aware ε-schedule length: bounded per-phase ε shrink factor."""
+    return 8 if n <= 32 else 12
+
+
+def default_max_iters(n: int) -> int:
+    """Per-phase bidding-round budget; contested columns serialize, so the
+    budget grows with n."""
+    return max(2000, 60 * n)
+
+
+def _top2(W, prices, use_kernel: bool):
+    """Per-row top-2 of ``W - prices`` — the shared bid reduction."""
+    if use_kernel:
+        from ...kernels.auction_bid.ops import masked_row_top2
+
+        return masked_row_top2(W, prices)
+    from ...kernels.auction_bid.ref import masked_row_top2_ref
+
+    return masked_row_top2_ref(W, prices)
+
+
+def _forward_round(W, row2col, col2row, prices, profits, eps, use_kernel):
+    """One Jacobi bidding round: all unassigned rows bid, columns take max.
+
+    Also maintains row profits (``π_i = v2 - ε`` for winners) so the same
+    round serves as one side of the forward-reverse matcher; the plain
+    forward matcher threads a zero array through unchanged cost.
+    """
+    n = W.shape[0]
+    arange = jnp.arange(n)
+    unassigned = row2col < 0
+    v1, v2, j1 = _top2(W, prices, use_kernel)
+    # Row i's bid for its favorite column j1[i].
+    bid = jnp.where(unassigned, W[arange, j1] - v2 + eps, _NEG)
+    # Columns take the best bid (scatter-max via a dense (n, n) mask).
+    B = jnp.full((n, n), _NEG, W.dtype).at[arange, j1].set(bid)
+    col_best = B.max(axis=0)
+    col_winner = B.argmax(axis=0)
+    has_bid = col_best > _NEG / 2
+    # Kick out previous owners of re-auctioned columns.
+    kicked = jnp.where(has_bid & (col2row >= 0), col2row, n)
+    row2col = row2col.at[kicked].set(-1, mode="drop")
+    # Install winners.
+    winner = jnp.where(has_bid, col_winner, n)
+    row2col = row2col.at[winner].set(jnp.where(has_bid, arange, -1), mode="drop")
+    col2row = jnp.where(has_bid, col_winner, col2row)
+    prices = jnp.where(has_bid, col_best, prices)
+    safe_winner = jnp.clip(col_winner, 0, n - 1)
+    profits = profits.at[winner].set(
+        jnp.where(has_bid, v2[safe_winner] - eps, 0.0), mode="drop"
+    )
+    return row2col, col2row, prices, profits
+
+
+def _reverse_round(W, row2col, col2row, prices, profits, eps, use_kernel):
+    """Column-side bidding: the forward round on ``W.T`` with roles swapped
+    (prices ↔ profits), sharing the same top-2 reduction."""
+    col2row, row2col, profits, prices = _forward_round(
+        W.T, col2row, row2col, profits, prices, eps, use_kernel
+    )
+    return row2col, col2row, prices, profits
+
+
+def _complete_greedy(row2col, col2row):
+    """Pair leftover rows with leftover columns in rank order so the result
+    is always a permutation (a ``-1`` corrupts downstream gathers)."""
+    n = row2col.shape[0]
+    un_r = row2col < 0
+    un_c = col2row < 0
+    rank_r = jnp.cumsum(un_r) - 1          # 0-based rank among unassigned rows
+    order_c = jnp.argsort(~un_c, stable=True)  # unassigned columns first
+    fill = order_c[jnp.clip(rank_r, 0, n - 1)].astype(row2col.dtype)
+    return jnp.where(un_r, fill, row2col)
+
+
+def _eps_schedule(W, num_phases: int):
+    """Geometric ε schedule from ``wmax/2`` down to the ulp-floored final ε."""
+    n = W.shape[0]
+    wmax = jnp.maximum(jnp.abs(W).max(), 1e-12)
+    eps_final = jnp.maximum(wmax * 1e-6 / n, wmax * _EPS_FLOOR)
+    ratio = (eps_final / (wmax / 2.0)) ** (1.0 / max(num_phases - 1, 1))
+    return (wmax / 2.0) * ratio ** jnp.arange(num_phases)
+
+
+@functools.partial(jax.jit, static_argnames=("num_phases", "max_iters", "use_kernel"))
+def match_auction(
+    W: jax.Array,
+    *,
+    num_phases: int | None = None,
+    max_iters: int | None = None,
+    use_kernel: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Forward ε-scaling auction. Returns ``(perm, converged)``."""
+    W = W.astype(jnp.float32)
+    n = W.shape[0]
+    if num_phases is None:
+        num_phases = default_num_phases(n)
+    if max_iters is None:
+        max_iters = default_max_iters(n)
+
+    def phase(state, eps):
+        _, _, prices = state
+        # Each phase restarts the assignment but keeps learned prices.
+        row2col = jnp.full((n,), -1, jnp.int32)
+        col2row = jnp.full((n,), -1, jnp.int32)
+        zeros = jnp.zeros((n,), jnp.float32)
+
+        def cond(c):
+            row2col, _, _, it = c
+            return (row2col < 0).any() & (it < max_iters)
+
+        def body(c):
+            row2col, col2row, prices, it = c
+            row2col, col2row, prices, _ = _forward_round(
+                W, row2col, col2row, prices, zeros, eps, use_kernel
+            )
+            return row2col, col2row, prices, it + 1
+
+        row2col, col2row, prices, _ = jax.lax.while_loop(
+            cond, body, (row2col, col2row, prices, 0)
+        )
+        return (row2col, col2row, prices), None
+
+    state = (
+        jnp.full((n,), -1, jnp.int32),
+        jnp.full((n,), -1, jnp.int32),
+        jnp.zeros((n,), jnp.float32),
+    )
+    state, _ = jax.lax.scan(phase, state, _eps_schedule(W, num_phases))
+    row2col, col2row, _ = state
+    converged = (row2col >= 0).all()
+    return _complete_greedy(row2col, col2row), converged
+
+
+@functools.partial(jax.jit, static_argnames=("num_phases", "max_iters", "use_kernel"))
+def match_auction_fr(
+    W: jax.Array,
+    *,
+    num_phases: int | None = None,
+    max_iters: int | None = None,
+    use_kernel: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Combined forward-reverse auction. Returns ``(perm, converged)``.
+
+    Rows and columns take turns bidding; the side flips whenever a round
+    grows the assignment (Bertsekas-Castañón switching rule — the matched
+    count never shrinks, so alternation cannot cycle).
+    """
+    W = W.astype(jnp.float32)
+    n = W.shape[0]
+    if num_phases is None:
+        num_phases = default_num_phases(n)
+    if max_iters is None:
+        max_iters = default_max_iters(n)
+
+    def phase(state, eps):
+        _, _, prices, profits = state
+        row2col = jnp.full((n,), -1, jnp.int32)
+        col2row = jnp.full((n,), -1, jnp.int32)
+
+        def cond(c):
+            row2col, _, _, _, _, it = c
+            return (row2col < 0).any() & (it < max_iters)
+
+        def body(c):
+            row2col, col2row, prices, profits, fwd, it = c
+            before = (row2col >= 0).sum()
+            row2col, col2row, prices, profits = jax.lax.cond(
+                fwd,
+                lambda a: _forward_round(W, *a, eps, use_kernel),
+                lambda a: _reverse_round(W, *a, eps, use_kernel),
+                (row2col, col2row, prices, profits),
+            )
+            grew = (row2col >= 0).sum() > before
+            return row2col, col2row, prices, profits, fwd ^ grew, it + 1
+
+        row2col, col2row, prices, profits, _, _ = jax.lax.while_loop(
+            cond, body, (row2col, col2row, prices, profits, jnp.bool_(True), 0)
+        )
+        return (row2col, col2row, prices, profits), None
+
+    state = (
+        jnp.full((n,), -1, jnp.int32),
+        jnp.full((n,), -1, jnp.int32),
+        jnp.zeros((n,), jnp.float32),
+        jnp.zeros((n,), jnp.float32),
+    )
+    state, _ = jax.lax.scan(phase, state, _eps_schedule(W, num_phases))
+    row2col, col2row, _, _ = state
+    converged = (row2col >= 0).all()
+    return _complete_greedy(row2col, col2row), converged
+
+
+# --------------------------------------------------------------- registry
+
+MatcherFn = Callable[..., tuple[jax.Array, jax.Array]]
+
+MATCHERS: dict[str, MatcherFn] = {
+    "auction": match_auction,
+    "auction_fr": match_auction_fr,
+}
+
+
+def get_matcher(name: str) -> MatcherFn:
+    if name not in MATCHERS:
+        raise KeyError(f"unknown matcher {name!r}; available: {list_matchers()}")
+    return MATCHERS[name]
+
+
+def list_matchers() -> list[str]:
+    return sorted(MATCHERS)
+
+
+def register_matcher(name: str, fn: MatcherFn, *, overwrite: bool = False) -> None:
+    """Add a device matcher: ``fn(W, *, num_phases, max_iters, use_kernel)
+    -> (perm, converged)``, jittable and vmappable."""
+    if name in MATCHERS and not overwrite:
+        raise ValueError(f"matcher {name!r} already registered")
+    replacing = name in MATCHERS
+    MATCHERS[name] = fn
+    if replacing:
+        # Jitted consumers resolve the name at trace time and key their
+        # caches on the string — drop them so the replacement takes effect.
+        from .decompose_jax import decompose_jax
+        from .e2e import spectra_jax_e2e, spectra_jax_e2e_many
+
+        for jitted in (decompose_jax, spectra_jax_e2e, spectra_jax_e2e_many):
+            jitted.clear_cache()

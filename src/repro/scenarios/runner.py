@@ -33,6 +33,7 @@ class PeriodResult:
     cct_s: float             # wall-clock CCT seconds (NaN for unit traces)
     meta: dict = field(default_factory=dict)
     demand_met: bool | None = None   # simulator verdict (None unless simulated)
+    ref_makespan: float = float("nan")  # quality_ref solver's makespan
 
 
 @dataclass
@@ -49,6 +50,7 @@ class ScenarioReport:
     delta_units: float               # δ the solver actually saw, in units
     num_shape_buckets: int           # solve_many dispatch groups (1 per shape)
     runtime_s: float                 # wall time of the solve_many call
+    quality_ref: str | None = None   # reference solver of the quality ratios
 
     @property
     def makespans(self) -> np.ndarray:
@@ -77,6 +79,27 @@ class ScenarioReport:
         finite = gaps[np.isfinite(gaps) & (gaps > 0)]
         return float(np.exp(np.mean(np.log(finite)))) if len(finite) else float("nan")
 
+    @property
+    def quality_ratios(self) -> np.ndarray:
+        """Per-period makespan / ``quality_ref`` solver's makespan (NaN when
+        ``run_scenario`` ran without a reference)."""
+        return np.array(
+            [p.makespan / p.ref_makespan if p.ref_makespan else float("nan")
+             for p in self.periods]
+        )
+
+    @property
+    def geomean_quality_ratio(self) -> float:
+        r = self.quality_ratios
+        finite = r[np.isfinite(r) & (r > 0)]
+        return float(np.exp(np.mean(np.log(finite)))) if len(finite) else float("nan")
+
+    @property
+    def max_quality_ratio(self) -> float:
+        r = self.quality_ratios
+        finite = r[np.isfinite(r)]
+        return float(finite.max()) if len(finite) else float("nan")
+
     def summary(self) -> dict[str, Any]:
         """Flat aggregate row (what the smoke lane and benchmarks print)."""
         mk = self.makespans
@@ -92,6 +115,11 @@ class ScenarioReport:
             "total_cct_s": self.total_cct_s,
             "buckets": self.num_shape_buckets,
             "runtime_s": self.runtime_s,
+            # Device-vs-host (or any solver-vs-solver) quality: geomean of
+            # per-period makespan ratios against quality_ref; NaN when the
+            # run carried no reference.
+            "quality_ratio": self.geomean_quality_ratio,
+            "quality_ref": self.quality_ref,
         }
 
 
@@ -102,6 +130,7 @@ def run_scenario(
     options: SolveOptions | None = None,
     simulate: bool = False,
     processes: int | None = None,
+    quality_ref: str | None = None,
     **overrides: Any,
 ) -> ScenarioReport:
     """Schedule a whole scenario trace with one batched ``solve_many`` call.
@@ -112,6 +141,13 @@ def run_scenario(
     δ-in-units) so the batch stays uniform; per-period CCT seconds are
     ``makespan · unit_s``. ``simulate=True`` additionally replays every
     period through ``repro.fabric.simulator`` and records ``demand_met``.
+
+    ``quality_ref`` names a second solver (e.g. ``"spectra"`` as the exact
+    host reference for a ``solver="spectra_jax"`` run) to solve the same
+    trace with; per-period ``ref_makespan`` and the report's quality-ratio
+    aggregates (``quality_ratios`` / ``geomean_quality_ratio`` /
+    ``max_quality_ratio``, plus ``summary()["quality_ratio"]``) compare
+    against it.
     """
     if isinstance(scenario, DemandTrace):
         if overrides:
@@ -130,6 +166,15 @@ def run_scenario(
         options=options, processes=processes,
     )
     runtime_s = time.perf_counter() - t0
+
+    ref_makespans = [float("nan")] * len(reports)
+    if quality_ref is not None:
+        ref_reports = solve_many(
+            units, spec.s, delta_units, solver=quality_ref,
+            options=SolveOptions(validate=False, compute_lb=False),
+            processes=processes,
+        )
+        ref_makespans = [r.makespan for r in ref_reports]
 
     periods: list[PeriodResult] = []
     for t, rep in enumerate(reports):
@@ -150,6 +195,7 @@ def run_scenario(
                 cct_s=rep.makespan * unit_s if np.isfinite(unit_s) else float("nan"),
                 meta=dict(trace.period_meta[t]),
                 demand_met=demand_met,
+                ref_makespan=ref_makespans[t],
             )
         )
     # Traces are uniform (T, n, n) stacks today, so this is 1 until
@@ -168,4 +214,5 @@ def run_scenario(
         delta_units=delta_units,
         num_shape_buckets=len(shape_buckets(list(units))),
         runtime_s=runtime_s,
+        quality_ref=quality_ref,
     )

@@ -1,0 +1,185 @@
+"""Device matcher registry: optimality vs scipy, both kernel paths, repair.
+
+The optimality property the subsystem rests on: with the n-aware ε-schedule
+scaled down to ``eps_final``, every registered matcher's assignment is
+within ``n·eps_final`` of ``scipy.optimize.linear_sum_assignment`` — exact
+for integer weights (``n·eps_final < 1`` at these sizes, since the
+ulp-floored ``eps_final ≈ wmax·2⁻²²``). Runs both the jnp reference and the
+Pallas ``use_kernel`` top-2 paths.
+"""
+
+import numpy as np
+import pytest
+from scipy.optimize import linear_sum_assignment
+
+from repro.core.decompose import Decomposition, decompose, degree
+from repro.core.jaxopt.decompose_jax import decompose_jax, to_decomposition
+from repro.core.jaxopt.matching import (
+    MATCHERS,
+    get_matcher,
+    list_matchers,
+    match_auction,
+    register_matcher,
+)
+
+jnp = pytest.importorskip("jax.numpy")
+
+ALL_MATCHERS = sorted(MATCHERS)
+
+
+def _optimal(W):
+    ri, ci = linear_sum_assignment(W, maximize=True)
+    return W[ri, ci].sum()
+
+
+def _matched_weight(W, perm):
+    perm = np.asarray(perm)
+    n = W.shape[0]
+    assert len(np.unique(perm)) == n, "matcher returned a non-permutation"
+    return W[np.arange(n), perm].sum()
+
+
+# ------------------------------------------------------------- optimality
+
+@pytest.mark.parametrize("matcher", ALL_MATCHERS)
+@pytest.mark.parametrize("n", [8, 16, 33, 64])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_matcher_exact_on_random_integers(matcher, n, seed):
+    rng = np.random.default_rng(seed)
+    W = rng.integers(0, 1000, (n, n)).astype(np.float32)
+    perm, conv = get_matcher(matcher)(jnp.asarray(W))
+    assert bool(conv)
+    # n·eps_final < 1 here, so integer weights are matched exactly.
+    assert _matched_weight(W, perm) == _optimal(W)
+
+
+@pytest.mark.parametrize("matcher", ALL_MATCHERS)
+@pytest.mark.parametrize("n", [16, 33, 64])
+@pytest.mark.parametrize("density", [0.1, 0.3])
+def test_matcher_near_optimal_on_sparse_floats(matcher, n, density):
+    rng = np.random.default_rng(n * 10 + int(density * 10))
+    W = (rng.random((n, n)) * (rng.random((n, n)) < density)).astype(np.float32)
+    perm, conv = get_matcher(matcher)(jnp.asarray(W))
+    assert bool(conv)
+    opt = _optimal(W)
+    assert _matched_weight(W, perm) >= opt - max(1e-3 * opt, 1e-6)
+
+
+@pytest.mark.parametrize("matcher", ALL_MATCHERS)
+@pytest.mark.parametrize("n", [16, 64])
+def test_matcher_kernel_path_matches_reference(matcher, n):
+    rng = np.random.default_rng(n)
+    W = rng.integers(0, 500, (n, n)).astype(np.float32)
+    fn = get_matcher(matcher)
+    p_ref, conv_ref = fn(jnp.asarray(W), use_kernel=False)
+    p_kern, conv_kern = fn(jnp.asarray(W), use_kernel=True)
+    assert bool(conv_ref) and bool(conv_kern)
+    # Both paths must reach the same (optimal) weight; tie-breaks may differ.
+    opt = _optimal(W)
+    assert _matched_weight(W, p_ref) == opt
+    assert _matched_weight(W, p_kern) == opt
+
+
+def test_matcher_large_sparse_with_coverage_bonus():
+    # The regime that broke the fixed 8-phase schedule: n=100, sparse
+    # support, node-coverage M-bonus folded into the weights (prices climb
+    # to ~wmax, where a too-small ε is below the float32 ulp and livelocks).
+    from repro.traffic.workloads import benchmark_workload
+
+    D = benchmark_workload(rng=np.random.default_rng(0))
+    S = D > 0
+    row_deg, col_deg = S.sum(1), S.sum(0)
+    k = max(row_deg.max(), col_deg.max())
+    M = np.maximum(D, 0.0).max(axis=1).sum() + 1.0
+    bonus = M * ((row_deg == k)[:, None].astype(float) + (col_deg == k)[None, :])
+    W = (np.maximum(D, 0.0) + np.where(S, bonus, 0.0)).astype(np.float32)
+    opt = _optimal(W)
+    for matcher in ALL_MATCHERS:
+        perm, conv = get_matcher(matcher)(jnp.asarray(W))
+        assert bool(conv), matcher
+        got = _matched_weight(W, perm)
+        assert got >= opt - 1e-4 * opt, matcher
+
+
+# --------------------------------------------------------------- registry
+
+def test_registry_round_trip_and_errors():
+    assert {"auction", "auction_fr"} <= set(list_matchers())
+    with pytest.raises(KeyError, match="unknown matcher"):
+        get_matcher("hungarian")
+    with pytest.raises(ValueError, match="already registered"):
+        register_matcher("auction", match_auction)
+    register_matcher("auction2", match_auction)
+    try:
+        assert get_matcher("auction2") is match_auction
+    finally:
+        del MATCHERS["auction2"]
+
+
+def test_unconverged_matcher_still_returns_a_permutation():
+    # Starve the iteration budget: converged=False must come with a valid
+    # (greedily completed) permutation, never -1 sentinels that would
+    # corrupt downstream gathers.
+    rng = np.random.default_rng(0)
+    W = rng.random((24, 24)).astype(np.float32)
+    perm, conv = match_auction(jnp.asarray(W), num_phases=2, max_iters=1)
+    assert not bool(conv)
+    perm = np.asarray(perm)
+    assert len(np.unique(perm)) == 24
+    assert (perm >= 0).all()
+
+
+# -------------------------------------------------- decompose integration
+
+@pytest.mark.parametrize("matcher", ALL_MATCHERS)
+def test_decompose_jax_matcher_choice(matcher):
+    rng = np.random.default_rng(4)
+    n = 16
+    D = (rng.random((n, n)) * (rng.random((n, n)) < 0.3)).astype(np.float32)
+    D[0, 1] = 0.9
+    dec = decompose_jax(jnp.asarray(D), matcher=matcher)
+    assert bool(dec.converged)
+    assert int(dec.k) == degree(D)
+    assert to_decomposition(dec).covers(D, tol=1e-5)
+
+
+def test_decompose_jax_unknown_matcher():
+    with pytest.raises(KeyError, match="unknown matcher"):
+        decompose_jax(jnp.zeros((4, 4)), matcher="nope")
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_repair_shrinks_weight_and_keeps_coverage(seed):
+    rng = np.random.default_rng(seed)
+    n = 20
+    D = (rng.random((n, n)) * (rng.random((n, n)) < 0.4)).astype(np.float32)
+    D[1, 2] = 1.0
+    plain = decompose_jax(jnp.asarray(D))
+    repaired = decompose_jax(jnp.asarray(D), repair_rounds=2)
+    dp, dr = to_decomposition(plain), to_decomposition(repaired)
+    assert dp.covers(D, tol=1e-4) and dr.covers(D, tol=1e-4)
+    # The local search only ever removes over-provisioned mass, and dropped
+    # zero-α rounds can only shrink k.
+    assert dr.total_weight() <= dp.total_weight() + 1e-5
+    assert dr.k <= dp.k
+    # Repaired alphas are compacted: every surviving round carries weight.
+    assert all(a > 0 for a in dr.alphas)
+    # Host reference: repair can only help the covered total, never break it.
+    host = decompose(np.asarray(D, np.float64))
+    assert dr.total_weight() <= host.total_weight() * 1.05 + 1e-6
+
+
+def test_repair_noop_on_tight_decompositions():
+    # Demand that IS a weighted permutation decomposes tightly (k=1, zero
+    # slack): repair must change nothing (guard for the repair sweep's
+    # slack accounting — it may only remove genuinely over-provisioned mass).
+    rng = np.random.default_rng(7)
+    n = 12
+    D = np.zeros((n, n))
+    D[np.arange(n), rng.permutation(n)] = 0.7
+    plain = decompose_jax(jnp.asarray(D, jnp.float32))
+    repaired = decompose_jax(jnp.asarray(D, jnp.float32), repair_rounds=3)
+    assert int(plain.k) == int(repaired.k) == 1
+    np.testing.assert_allclose(
+        np.asarray(plain.alphas), np.asarray(repaired.alphas), atol=1e-6
+    )
