@@ -10,8 +10,11 @@ to benchmarks/out/.
 entries end-to-end through ``run_scenario`` (whole trace → one batched
 ``solve_many``): ``--scenario gpt moe`` or ``--scenario all``, with
 ``--solver`` picking the registry solver (default spectra) and ``--periods``
-overriding the trace length. ``--fast`` shrinks scenario mode to tiny
-(n=8, T=3) variants — the smoke-lane configuration.
+overriding the trace length. ``--online`` additionally runs the stateful
+cross-period controller over each trace and exits 1 if any online period
+comes out worse than its stateless baseline (the CI online gate).
+``--fast`` shrinks scenario mode to tiny (n=8, T=3) variants — the
+smoke-lane configuration.
 
 Either mode prints one ``name,us_per_call,derived`` line per table.
 """
@@ -23,7 +26,10 @@ import os
 import sys
 
 
-def _run_scenarios(names: list[str], solver: str, periods: int | None, fast: bool) -> None:
+def _run_scenarios(
+    names: list[str], solver: str, periods: int | None, fast: bool,
+    online: bool = False,
+) -> None:
     from repro.scenarios import list_scenarios, run_scenario
 
     if names == ["all"]:
@@ -37,7 +43,7 @@ def _run_scenarios(names: list[str], solver: str, periods: int | None, fast: boo
     failures = 0
     for name in names:
         try:
-            rep = run_scenario(name, solver=solver, **overrides)
+            rep = run_scenario(name, solver=solver, online=online, **overrides)
         except Exception as exc:
             print(f"scenario_{name},nan,ERROR:{type(exc).__name__}:{exc}")
             failures += 1
@@ -49,6 +55,23 @@ def _run_scenarios(names: list[str], solver: str, periods: int | None, fast: boo
         )
         if rep.spec.units == "bytes":
             derived += f";cct_s={s['total_cct_s']:.4g}"
+        if online:
+            o = rep.online_summary()
+            derived += (
+                f";online_mk={o['online_total_makespan']:.4f};"
+                f"stateless_mk={o['stateless_total_makespan']:.4f};"
+                f"reuse={o['total_reuse']};"
+                f"d_avoided={o['total_delta_avoided']:.4f}"
+            )
+            # The structural guarantee this mode gates in CI: no online
+            # period may come out worse than its stateless baseline.
+            bad = [
+                p.period for p in rep.online_periods
+                if p.makespan > p.stateless_makespan * (1 + 1e-6) + 1e-9
+            ]
+            if bad:
+                derived += f";VIOLATION_periods={bad}"
+                failures += 1
         print(f"scenario_{name},{1e6 * s['runtime_s'] / max(s['periods'], 1):.0f},{derived}")
         sys.stdout.flush()
     if failures:  # scenario mode gates CI — a broken scenario must fail the job
@@ -63,6 +86,7 @@ def _run_figures() -> None:
         fig9_benchmark,
         fig10_sparsity,
         fig11_degree,
+        fig_online,
         improved_table,
         runtime_table,
     )
@@ -74,6 +98,7 @@ def _run_figures() -> None:
         fig9_benchmark,
         fig10_sparsity,
         fig11_degree,
+        fig_online,
         runtime_table,
         improved_table,
     ]
@@ -106,12 +131,17 @@ def main(argv: list[str] | None = None) -> None:
                     help="repro.api solver for --scenario mode (default: spectra)")
     ap.add_argument("--periods", type=int, default=None,
                     help="override trace length T in --scenario mode")
+    ap.add_argument("--online", action="store_true",
+                    help="scenario mode: run the stateful cross-period "
+                         "controller too; exit 1 if any online period is "
+                         "worse than its stateless baseline")
     args = ap.parse_args(argv)
 
     if args.fast:
         os.environ["REPRO_BENCH_FAST"] = "1"
     if args.scenario:
-        _run_scenarios(args.scenario, args.solver, args.periods, args.fast)
+        _run_scenarios(args.scenario, args.solver, args.periods, args.fast,
+                       online=args.online)
     else:
         _run_figures()
 

@@ -45,3 +45,28 @@ tickets = svc.submit_trace(make_trace("moe", n=16, periods=4, tokens_per_gpu=512
 reports = svc.flush()
 for t in tickets:
     print(f"  ticket {t}: makespan={reports[t].makespan:.4f}")
+
+# Online cross-period scheduling: the controller carries each switch's
+# installed permutation between periods — matching configurations serve
+# δ-free (reuse credit), decompositions warm-start from the previous set.
+print("\n=== run_scenario('gpt', online=True): stateful controller ===")
+rep = run_scenario("gpt", solver="spectra", online=True)
+for p in rep.online_periods:
+    print(f"  period {p.period}: online={p.makespan:.4f} "
+          f"stateless={p.stateless_makespan:.4f} reuse={p.reuse_count} "
+          f"δ_avoided={p.delta_avoided:.4f} δ_paid={p.delta_paid:.4f}"
+          f"{' (warm dec)' if p.warm else ''}")
+o = rep.online_summary()
+print(f"trace total: online={o['online_total_makespan']:.4f} vs "
+      f"stateless={o['stateless_total_makespan']:.4f} "
+      f"(δ avoided {o['total_delta_avoided']:.4f} over "
+      f"{o['total_reuse']} switch-periods)")
+
+# The same controller as a stateful serving session (state threads through
+# SolveOptions.extra["online"] automatically).
+print("\n=== SolverService.open_session: stateful serving ===")
+ses = svc.open_session()
+for rep_t in ses.run(make_trace("moe", n=16, periods=4, tokens_per_gpu=512)):
+    print(f"  step: makespan={rep_t.makespan:.4f} "
+          f"reuse={rep_t.extras['reuse_count']} warm={rep_t.extras['warm']}")
+print(f"total δ avoided this session: {ses.total_delta_avoided:.4f}")

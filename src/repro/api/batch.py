@@ -39,10 +39,22 @@ def _solve_one(args) -> SolveReport:
     return solve(Problem(D, s, delta), solver=solver, options=options)
 
 
+def _as_deltas(delta, B: int) -> np.ndarray:
+    """Normalize δ (scalar or per-instance sequence) to a (B,) vector."""
+    arr = np.asarray(delta, dtype=np.float64)
+    if arr.ndim == 0:
+        return np.full((B,), float(arr))
+    if arr.shape != (B,):
+        raise ValueError(
+            f"per-instance delta must have length {B}, got shape {arr.shape}"
+        )
+    return arr
+
+
 def solve_many(
     Ds,
     s: int,
-    delta: float,
+    delta,
     *,
     solver: str = "spectra",
     options: SolveOptions | None = None,
@@ -51,21 +63,27 @@ def solve_many(
     """Solve a batch of demand matrices; one SolveReport per instance.
 
     Ds may be a stacked ``(B, n, n)`` array or a sequence of square
-    matrices — the shapes need not match. ``solver="spectra_jax"`` groups
-    the instances into **shape buckets** (ragged-n batching): each bucket
-    runs the fused DECOMPOSE→SCHEDULE→EQUALIZE device call once for all its
-    instances (host schedules materialize lazily), and results come back in
+    matrices — the shapes need not match. ``delta`` is one δ for the whole
+    batch or a length-B per-instance vector (trace-aware δ sweeps: a trace
+    whose reconfiguration delay varies per period still batches into the
+    same dispatches). ``solver="spectra_jax"`` groups the instances into
+    **shape buckets** (ragged-n batching): each bucket runs the fused
+    DECOMPOSE→SCHEDULE→EQUALIZE device call once for all its instances
+    (host schedules materialize lazily), and results come back in
     submission order regardless of bucketing — so a mixed n ∈ {32, 64, 100}
     submission costs one device dispatch per distinct shape, not per
-    instance. Every other solver loops, across ``processes`` workers when
-    given. Worker processes start via forkserver/spawn once jax is loaded,
-    so scripts using ``processes`` need the standard
-    ``if __name__ == "__main__":`` guard.
+    instance. The device matcher is autotuned per bucket
+    (``core.jaxopt.matching.default_matcher``) unless
+    ``options.extra["matcher"]`` pins one. Every other solver loops, across
+    ``processes`` workers when given. Worker processes start via
+    forkserver/spawn once jax is loaded, so scripts using ``processes``
+    need the standard ``if __name__ == "__main__":`` guard.
     """
     options = options or SolveOptions()
     mats = _as_stack(Ds)
     if not mats:
         return []
+    deltas = _as_deltas(delta, len(mats))
     if solver == "spectra_jax":
         try:
             from .jax_backend import solve_many_jax
@@ -75,12 +93,15 @@ def solve_many(
             out: list[SolveReport | None] = [None] * len(mats)
             for idxs in shape_buckets(mats).values():
                 reports = solve_many_jax(
-                    np.stack([mats[i] for i in idxs]), s, delta, options
+                    np.stack([mats[i] for i in idxs]),
+                    s,
+                    deltas[idxs],
+                    options,
                 )
                 for i, rep in zip(idxs, reports):
                     out[i] = rep
             return out  # type: ignore[return-value]
-    work = [(D, s, delta, solver, options) for D in mats]
+    work = [(D, s, float(d), solver, options) for D, d in zip(mats, deltas)]
     if processes and processes > 1 and len(work) > 1:
         import multiprocessing as mp
         import sys

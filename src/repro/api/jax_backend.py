@@ -12,9 +12,10 @@ path never loops over instances on the host.
 ``SolveOptions.extra`` knobs: ``use_kernel`` (Pallas top-2 reduction),
 ``equalize`` (default True), ``merge_aware`` (SPECTRA++ merge-aware device
 EQUALIZE), ``extra_slots`` (EQUALIZE split headroom, default 64),
-``matcher`` (device MWM solver name from ``core.jaxopt.matching.MATCHERS``,
-default ``"auction"``), ``repair_rounds`` (post-REFINE device local-search
-sweeps, default 0 = paper-faithful Alg. 1+2).
+``matcher`` (device MWM solver name from ``core.jaxopt.matching.MATCHERS``;
+unset → autotuned per shape bucket by ``matching.default_matcher``:
+``auction`` at n ≤ 32, ``auction_fr`` above), ``repair_rounds`` (post-REFINE
+device local-search sweeps, default 0 = paper-faithful Alg. 1+2).
 """
 
 from __future__ import annotations
@@ -32,13 +33,18 @@ from ..core.schedule_ir import DeviceSchedule, LazySchedule, ir_to_schedule
 from .problem import Problem, SolveOptions, SolveReport, finish_report
 
 
-def _e2e_kwargs(options: SolveOptions) -> dict:
+def _e2e_kwargs(options: SolveOptions, n: int) -> dict:
+    from ..core.jaxopt.matching import default_matcher
+
     return dict(
         use_kernel=bool(options.extra.get("use_kernel", False)),
         do_equalize=bool(options.extra.get("equalize", True)),
         merge_aware=bool(options.extra.get("merge_aware", False)),
         extra_slots=int(options.extra.get("extra_slots", 64)),
-        matcher=str(options.extra.get("matcher", "auction")),
+        # Autotuned per shape bucket unless the caller pins one: every
+        # instance in a fused dispatch shares n, so the bucket IS the
+        # autotuning granularity.
+        matcher=str(options.extra.get("matcher") or default_matcher(n)),
         repair_rounds=int(options.extra.get("repair_rounds", 0)),
     )
 
@@ -80,7 +86,7 @@ class _HostBatch:
     def __init__(
         self,
         res: E2EResult,
-        delta: float,
+        deltas: np.ndarray,
         *,
         merge_aware: bool = False,
         matcher: str = "auction",
@@ -102,7 +108,11 @@ class _HostBatch:
         self.converged = np.asarray(res.dec.converged)
         self.eq_exhausted = np.asarray(res.eq_exhausted)
         self.lbs = np.asarray(res.lb, dtype=np.float64)
-        self.delta = float(delta)
+        # Per-instance δ (trace-aware sweeps batch mixed δs in one dispatch).
+        B = self.makespans.shape[0]
+        self.deltas = np.broadcast_to(
+            np.asarray(deltas, dtype=np.float64), (B,)
+        )
 
     def decomposition(self, b: int) -> Decomposition:
         """Host Decomposition of instance b (pre-EQUALIZE weights), as the
@@ -119,7 +129,7 @@ class _HostBatch:
         perms = self.perms[b].copy()
         alphas = self.alphas[b].copy()
         switch = self.switch[b].copy()
-        delta = self.delta
+        delta = float(self.deltas[b])
         exhausted = bool(self.eq_exhausted[b])
         merge_aware = self.merge_aware
 
@@ -146,7 +156,7 @@ class _HostBatch:
         extras: dict | None = None,
         device_lb: bool = True,
     ) -> SolveReport:
-        lazy = LazySchedule(self.schedule_thunk(b, problem.s), self.delta)
+        lazy = LazySchedule(self.schedule_thunk(b, problem.s), float(self.deltas[b]))
         device_makespan = float(self.makespans[b])
         exhausted = bool(self.eq_exhausted[b])
         converged = bool(self.converged[b])
@@ -206,13 +216,15 @@ class _HostBatch:
 def solve_spectra_jax(problem: Problem, options: SolveOptions) -> SolveReport:
     """Registry entry: one instance, full DECOMPOSE→SCHEDULE→EQUALIZE on device."""
     D = jnp.asarray(np.asarray(problem.D), jnp.float32)
-    kwargs = _e2e_kwargs(options)
+    kwargs = _e2e_kwargs(options, problem.n)
     t0 = time.perf_counter()
     res = spectra_jax_e2e(D, problem.s, jnp.float32(problem.delta), **kwargs)
     jax.block_until_ready(res.makespan)
     runtime_s = time.perf_counter() - t0
     batch = _HostBatch(
-        jax.tree_util.tree_map(lambda x: x[None], res), problem.delta, **kwargs
+        jax.tree_util.tree_map(lambda x: x[None], res),
+        np.array([problem.delta]),
+        **kwargs,
     )
     return batch.report(0, problem, options, runtime_s, device_lb=False)
 
@@ -220,30 +232,33 @@ def solve_spectra_jax(problem: Problem, options: SolveOptions) -> SolveReport:
 def solve_many_jax(
     Ds: np.ndarray,
     s: int,
-    delta: float,
+    delta,
     options: SolveOptions,
 ) -> list[SolveReport]:
     """Batched path for ``solve_many``: DECOMPOSE, SCHEDULE, *and* EQUALIZE
     for the whole stack in one vmapped device call; per-instance host
     schedules materialize lazily (on validation/access), never eagerly.
     §IV lower bounds come from the same fused call (float32, parity ≤1e-7
-    rel) instead of a per-instance host loop."""
+    rel) instead of a per-instance host loop. ``delta`` is a scalar or a
+    per-instance (B,) vector (trace-aware δ sweeps) — the fused call vmaps
+    over it either way."""
     # Only the device input is float32; reports validate against the
     # caller's matrices, exactly like the single-instance path.
     mats = np.asarray(Ds, dtype=np.float64)
-    kwargs = _e2e_kwargs(options)
+    B = mats.shape[0]
+    deltas = np.broadcast_to(np.asarray(delta, dtype=np.float64), (B,))
+    kwargs = _e2e_kwargs(options, int(mats.shape[-1]))
     t0 = time.perf_counter()
     res = spectra_jax_e2e_many(
-        mats.astype(np.float32), s, jnp.float32(delta), **kwargs
+        mats.astype(np.float32), s, deltas.astype(np.float32), **kwargs
     )
     jax.block_until_ready(res.makespan)
     device_s = time.perf_counter() - t0
-    B = mats.shape[0]
-    batch = _HostBatch(res, delta, **kwargs)
+    batch = _HostBatch(res, deltas, **kwargs)
     return [
         batch.report(
             b,
-            Problem(mats[b], s, delta),
+            Problem(mats[b], s, float(deltas[b])),
             options,
             device_s / B,
             extras={"batched": True, "batch_size": B, "fused": True},

@@ -45,6 +45,11 @@ def register_solver(
 
 
 def get_solver(name: str) -> SolverFn:
+    if name not in _SOLVERS and name.startswith("spectra_online"):
+        # The online subsystem registers its stateful solvers on import;
+        # importing it here (not at module load) avoids the api ↔ online
+        # circular dependency.
+        from .. import online  # noqa: F401
     if name not in _SOLVERS:
         raise KeyError(f"unknown solver {name!r}; available: {list_solvers()}")
     return _SOLVERS[name]

@@ -18,29 +18,44 @@ import numpy as np
 from .schedule import ParallelSchedule
 
 
+def perm_key(perm: np.ndarray) -> bytes:
+    """Dtype-normalized hash key for a permutation (bytes of its int64
+    array), so int32 device perms and int64 host perms with equal values
+    hash alike — matching ``np.array_equal`` semantics. Shared by the
+    merge-aware EQUALIZE lookup and the online subsystem's installed-state
+    matching."""
+    return np.ascontiguousarray(perm, dtype=np.int64).tobytes()
+
+
 def equalize(
     sched: ParallelSchedule,
     *,
     merge_aware: bool = False,
     max_iters: int | None = None,
+    load_offset: np.ndarray | None = None,
 ) -> ParallelSchedule:
-    """Alg. 4, in place on ``sched`` (also returned for chaining)."""
+    """Alg. 4, in place on ``sched`` (also returned for chaining).
+
+    ``load_offset`` shifts each switch's *effective* load (online
+    scheduling's reuse credit: a switch whose first configuration is
+    already installed pays no δ for it, so its offset is −δ). Offsets are
+    constant per switch — the credited configuration never leaves its
+    switch (splits only shrink it) — so they simply bias the argmax/argmin
+    choices and the target spread.
+    """
     s = sched.s
     delta = sched.delta
     if s <= 1:
         return sched
     loads = sched.loads()
+    if load_offset is not None:
+        loads = loads + np.asarray(load_offset, dtype=np.float64)
     if max_iters is None:
         max_iters = 64 * (sched.num_configs() + s) + 64
-    # Hash every permutation once (bytes of its int array) so the merge
+    # Hash every permutation once (module-level perm_key) so the merge
     # lookup is O(1) per iteration instead of an O(configs) rescan of the
     # destination switch. setdefault keeps the first slot on duplicates,
     # matching the original first-match scan.
-    def perm_key(p: np.ndarray) -> bytes:
-        # Normalized dtype so int32 device perms and int64 host perms with
-        # equal values hash alike, matching np.array_equal semantics.
-        return np.ascontiguousarray(p, dtype=np.int64).tobytes()
-
     tables: list[dict[bytes, int]] = []
     if merge_aware:
         for sw in sched.switches:

@@ -11,6 +11,8 @@ Everything here operates on dense, fixed-shape arrays — the
     equalize_jax      Alg. 4 (incl. merge-aware SPECTRA++) as lax.while_loop
     lower_bounds_jax  §IV bounds, vectorized over all 2n lines
     e2e               fused DECOMPOSE → SCHEDULE → EQUALIZE (+ LB), one call
+    online_jax        stateful cross-period steps + the lax.scan rolling
+                      solve (whole trace = one dispatch, switch state carry)
 """
 
 from .auction import auction_maximize, auction_maximize_batch
@@ -25,6 +27,7 @@ from .matching import (
 from .decompose_jax import (
     JaxDecomposition,
     decompose_jax,
+    decompose_jax_prices,
     lpt_schedule_jax,
     spectra_jax,
     to_decomposition,
@@ -32,18 +35,30 @@ from .decompose_jax import (
 from .e2e import E2EResult, spectra_jax_e2e, spectra_jax_e2e_many
 from .equalize_jax import equalize_ir, equalize_ir_jit, equalize_jax
 from .lower_bounds_jax import lower_bound_jax, lower_bounds_many
+from .online_jax import (
+    OnlineDeviceState,
+    OnlineStepResult,
+    online_initial_state,
+    online_step_jax,
+    spectra_online_scan,
+)
 
 __all__ = [
     "E2EResult",
     "JaxDecomposition",
     "MATCHERS",
+    "OnlineDeviceState",
+    "OnlineStepResult",
     "auction_maximize",
     "auction_maximize_batch",
     "decompose_jax",
+    "decompose_jax_prices",
     "get_matcher",
     "list_matchers",
     "match_auction",
     "match_auction_fr",
+    "online_initial_state",
+    "online_step_jax",
     "register_matcher",
     "equalize_ir",
     "equalize_ir_jit",
@@ -54,5 +69,6 @@ __all__ = [
     "spectra_jax",
     "spectra_jax_e2e",
     "spectra_jax_e2e_many",
+    "spectra_online_scan",
     "to_decomposition",
 ]

@@ -44,33 +44,39 @@ class JaxDecomposition(NamedTuple):
     converged: jax.Array  # () bool: all matcher calls converged
 
 
-@functools.partial(
-    jax.jit, static_argnames=("use_kernel", "matcher", "repair_rounds")
-)
-def decompose_jax(
+def _decompose(
     D: jax.Array,
     *,
-    use_kernel: bool = False,
-    matcher: str = "auction",
-    repair_rounds: int = 0,
-) -> JaxDecomposition:
-    """Exactly-k decomposition of D (Alg. 1 + greedy REFINE), on device.
+    use_kernel: bool,
+    matcher: str,
+    repair_rounds: int,
+    carry_prices: bool,
+    prices0: jax.Array | None,
+) -> tuple[JaxDecomposition, jax.Array]:
+    """Shared impl; returns ``(dec, final dual prices)``.
 
-    ``matcher`` picks the device MWM solver from ``matching.MATCHERS``;
-    ``repair_rounds`` bounds the post-REFINE local-search sweeps (0 keeps
-    the paper-faithful Alg. 1+2 output bit-for-bit).
+    ``carry_prices=True`` threads the matcher's column dual prices through
+    the rounds (each round warm-starts from the previous round's finals)
+    and seeds round 0 with ``prices0`` — the online controller's
+    cross-period warm start. ``False`` reproduces the stateless behavior
+    bit-for-bit (every round starts from zero prices).
     """
     match = get_matcher(matcher)
     D = D.astype(jnp.float32)
     n = D.shape[0]
     arange = jnp.arange(n)
+    init_prices = (
+        jnp.zeros((n,), jnp.float32)
+        if prices0 is None
+        else jnp.asarray(prices0, jnp.float32)
+    )
 
     def cond(st):
-        _, S_rem, _, _, i, _ = st
+        _, S_rem, _, _, i, _, _ = st
         return S_rem.any() & (i < n)
 
     def body(st):
-        D_rem, S_rem, perms, alphas, i, conv = st
+        D_rem, S_rem, perms, alphas, i, conv, prices = st
         row_deg = S_rem.sum(axis=1)
         col_deg = S_rem.sum(axis=0)
         k = jnp.maximum(row_deg.max(), col_deg.max())
@@ -88,7 +94,12 @@ def decompose_jax(
         M = (base.max(axis=1).sum() + 1.0) * (1.0 + n * 2.0**-19)
         bonus = M * (crit_r[:, None].astype(jnp.float32) + crit_c[None, :])
         W = base + jnp.where(S_rem, bonus, 0.0)
-        perm, ok = match(W, use_kernel=use_kernel)
+        if carry_prices:
+            perm, ok, prices = match(
+                W, use_kernel=use_kernel, prices0=prices, with_prices=True
+            )
+        else:
+            perm, ok = match(W, use_kernel=use_kernel)
         newly = S_rem[arange, perm]
         # α = min D_rem over *newly covered* support, exactly the numpy
         # "covered_support" rule: a round that newly covers nothing gets α=0
@@ -99,7 +110,7 @@ def decompose_jax(
         S_rem = S_rem.at[arange, perm].set(False)
         perms = perms.at[i].set(perm.astype(jnp.int32))
         alphas = alphas.at[i].set(alpha)
-        return D_rem, S_rem, perms, alphas, i + 1, conv & ok
+        return D_rem, S_rem, perms, alphas, i + 1, conv & ok, prices
 
     init = (
         D,
@@ -108,8 +119,11 @@ def decompose_jax(
         jnp.zeros((n,), jnp.float32),
         jnp.int32(0),
         jnp.bool_(True),
+        init_prices,
     )
-    D_rem, S_rem, perms, alphas, k, conv = jax.lax.while_loop(cond, body, init)
+    D_rem, S_rem, perms, alphas, k, conv, prices = jax.lax.while_loop(
+        cond, body, init
+    )
 
     cov_idx = (jnp.broadcast_to(arange[None, :], (n, n)), perms)
     round_live = (jnp.arange(n) < k)[:, None]
@@ -136,7 +150,53 @@ def decompose_jax(
         perms, alphas, k = _repair(
             D, perms, alphas, k, coverage, repair_rounds
         )
-    return JaxDecomposition(perms=perms, alphas=alphas, k=k, converged=conv)
+    dec = JaxDecomposition(perms=perms, alphas=alphas, k=k, converged=conv)
+    return dec, prices
+
+
+@functools.partial(
+    jax.jit, static_argnames=("use_kernel", "matcher", "repair_rounds")
+)
+def decompose_jax(
+    D: jax.Array,
+    *,
+    use_kernel: bool = False,
+    matcher: str = "auction",
+    repair_rounds: int = 0,
+) -> JaxDecomposition:
+    """Exactly-k decomposition of D (Alg. 1 + greedy REFINE), on device.
+
+    ``matcher`` picks the device MWM solver from ``matching.MATCHERS``;
+    ``repair_rounds`` bounds the post-REFINE local-search sweeps (0 keeps
+    the paper-faithful Alg. 1+2 output bit-for-bit).
+    """
+    dec, _ = _decompose(
+        D, use_kernel=use_kernel, matcher=matcher,
+        repair_rounds=repair_rounds, carry_prices=False, prices0=None,
+    )
+    return dec
+
+
+@functools.partial(
+    jax.jit, static_argnames=("use_kernel", "matcher", "repair_rounds")
+)
+def decompose_jax_prices(
+    D: jax.Array,
+    prices0: jax.Array,
+    *,
+    use_kernel: bool = False,
+    matcher: str = "auction",
+    repair_rounds: int = 0,
+) -> tuple[JaxDecomposition, jax.Array]:
+    """Warm-started decomposition: seed the matcher's dual prices with
+    ``prices0`` (e.g. the previous controller period's finals) and return
+    ``(dec, final prices)`` so the caller can carry them forward. Requires
+    a matcher that supports ``prices0``/``with_prices`` (both built-ins do).
+    """
+    return _decompose(
+        D, use_kernel=use_kernel, matcher=matcher,
+        repair_rounds=repair_rounds, carry_prices=True, prices0=prices0,
+    )
 
 
 def _repair(D, perms, alphas, k, coverage, repair_rounds: int):

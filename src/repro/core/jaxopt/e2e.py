@@ -114,13 +114,21 @@ def spectra_jax_e2e_many(
     matcher: str = "auction",
     repair_rounds: int = 0,
 ) -> E2EResult:
-    """vmapped fused pipeline over stacked (B, n, n) demand matrices."""
+    """vmapped fused pipeline over stacked (B, n, n) demand matrices.
+
+    ``delta`` may be a scalar (one δ for the whole batch) or a (B,) vector
+    (per-instance δ — how trace-aware δ sweeps batch a whole trace whose
+    reconfiguration delay varies per period into one dispatch).
+    """
     Ds = jnp.asarray(Ds, jnp.float32)
+    deltas = jnp.broadcast_to(
+        jnp.asarray(delta, jnp.float32), (Ds.shape[0],)
+    )
     return jax.vmap(
-        lambda D: spectra_jax_e2e(
+        lambda D, d: spectra_jax_e2e(
             D,
             s,
-            delta,
+            d,
             use_kernel=use_kernel,
             do_equalize=do_equalize,
             merge_aware=merge_aware,
@@ -128,4 +136,4 @@ def spectra_jax_e2e_many(
             matcher=matcher,
             repair_rounds=repair_rounds,
         )
-    )(Ds)
+    )(Ds, deltas)

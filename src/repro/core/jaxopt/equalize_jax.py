@@ -57,8 +57,15 @@ def equalize_ir(
     *,
     merge_aware: bool = False,
     max_iters: int | None = None,
+    load_offset: jax.Array | None = None,
 ) -> tuple[DeviceSchedule, jax.Array]:
     """Alg. 4 on device; returns ``(schedule, exhausted)`` (same capacity).
+
+    ``load_offset`` is an optional (s,) shift on each switch's effective
+    load — the online controller passes −δ for switches whose first
+    configuration is carried over from the previous period (reuse credit).
+    The credited slot never changes switches (splits only shrink it), so
+    the offset is loop-invariant.
 
     ``exhausted`` is a () bool set when the slot table ran out of split
     headroom — the one stop condition the host path doesn't have, i.e. the
@@ -76,6 +83,11 @@ def equalize_ir(
     switch0 = ds.switch.astype(jnp.int32)
     delta = jnp.asarray(ds.delta, jnp.float32)
     count0 = (switch0 >= 0).sum().astype(jnp.int32)
+    offset = (
+        jnp.zeros((s,), jnp.float32)
+        if load_offset is None
+        else jnp.asarray(load_offset, jnp.float32)
+    )
     iter_cap = (
         jnp.int32(max_iters)
         if max_iters is not None
@@ -90,7 +102,7 @@ def equalize_ir(
     def body(st):
         perms, alphas, switch, canon, count, it, _, exhausted = st
         live = switch >= 0
-        loads = device_loads(alphas, switch, delta, s)
+        loads = device_loads(alphas, switch, delta, s) + offset
         h_max = jnp.argmax(loads)
         h_min = jnp.argmin(loads)
         spread_ok = loads[h_max] - loads[h_min] <= delta
@@ -161,9 +173,13 @@ def equalize_ir_jit(
     *,
     merge_aware: bool = False,
     max_iters: int | None = None,
+    load_offset: jax.Array | None = None,
 ):
     """Jitted ``equalize_ir``; returns ``(schedule, exhausted)``."""
-    return equalize_ir(ds, s, merge_aware=merge_aware, max_iters=max_iters)
+    return equalize_ir(
+        ds, s, merge_aware=merge_aware, max_iters=max_iters,
+        load_offset=load_offset,
+    )
 
 
 def equalize_jax(sched, n: int | None = None, *, merge_aware: bool = False,

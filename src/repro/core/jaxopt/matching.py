@@ -63,6 +63,49 @@ def default_num_phases(n: int) -> int:
     return 8 if n <= 32 else 12
 
 
+# Shape-bucket autotuning: the matcher ``repro.api`` picks per shape bucket
+# when the caller didn't name one. ``auction`` wins below the threshold
+# (fastest on the paper workloads); above it the combined forward-reverse
+# auction's dual-side bidding is the robust default against the one-sided
+# price wars sparse large-n instances can trigger (measured at moe n=64 and
+# benchmark n=100: identical 1.0000 quality, converged). Override per call
+# via ``SolveOptions.extra["matcher"]`` or globally via
+# ``set_default_matcher_policy``.
+AUTOTUNE_N_THRESHOLD = 32
+
+_DEFAULT_POLICY = None  # None → built-in threshold rule
+
+
+def default_matcher(n: int) -> str:
+    """Registry default for an (n, n) instance (see AUTOTUNE_N_THRESHOLD)."""
+    if _DEFAULT_POLICY is not None:
+        name = _DEFAULT_POLICY(n)
+        if name not in MATCHERS:
+            # The install-time probe only sees one n; an n-dependent policy
+            # can still return a bad name for other sizes — fail here with
+            # the policy named, not deep inside a jitted dispatch.
+            raise KeyError(
+                f"default matcher policy returned unknown matcher {name!r} "
+                f"for n={n}; available: {list_matchers()}"
+            )
+        return name
+    return "auction" if n <= AUTOTUNE_N_THRESHOLD else "auction_fr"
+
+
+def set_default_matcher_policy(policy) -> None:
+    """Install ``policy(n) -> matcher name`` as the autotuning rule
+    (``None`` restores the built-in threshold rule)."""
+    global _DEFAULT_POLICY
+    if policy is not None:
+        name = policy(8)
+        if name not in MATCHERS:
+            raise KeyError(
+                f"policy returned unknown matcher {name!r}; "
+                f"available: {list_matchers()}"
+            )
+    _DEFAULT_POLICY = policy
+
+
 def default_max_iters(n: int) -> int:
     """Per-phase bidding-round budget; contested columns serialize, so the
     budget grows with n."""
@@ -143,21 +186,39 @@ def _eps_schedule(W, num_phases: int):
     return (wmax / 2.0) * ratio ** jnp.arange(num_phases)
 
 
-@functools.partial(jax.jit, static_argnames=("num_phases", "max_iters", "use_kernel"))
+@functools.partial(
+    jax.jit, static_argnames=("num_phases", "max_iters", "use_kernel", "with_prices")
+)
 def match_auction(
     W: jax.Array,
     *,
     num_phases: int | None = None,
     max_iters: int | None = None,
     use_kernel: bool = False,
-) -> tuple[jax.Array, jax.Array]:
-    """Forward ε-scaling auction. Returns ``(perm, converged)``."""
+    prices0: jax.Array | None = None,
+    with_prices: bool = False,
+) -> tuple[jax.Array, ...]:
+    """Forward ε-scaling auction. Returns ``(perm, converged)``.
+
+    ``prices0`` warm-starts the column dual prices (e.g. the final prices of
+    a previous, similar instance — the online controller's cross-period
+    carry). ε-scaling already re-derives the assignment from prices each
+    phase, so a warm start is equivalent to having run one extra earlier
+    phase: optimality is unaffected, convergence on near-repeated instances
+    is faster. ``with_prices=True`` appends the final prices to the return
+    for callers that carry them forward.
+    """
     W = W.astype(jnp.float32)
     n = W.shape[0]
     if num_phases is None:
         num_phases = default_num_phases(n)
     if max_iters is None:
         max_iters = default_max_iters(n)
+    init_prices = (
+        jnp.zeros((n,), jnp.float32)
+        if prices0 is None
+        else jnp.asarray(prices0, jnp.float32)
+    )
 
     def phase(state, eps):
         _, _, prices = state
@@ -185,27 +246,36 @@ def match_auction(
     state = (
         jnp.full((n,), -1, jnp.int32),
         jnp.full((n,), -1, jnp.int32),
-        jnp.zeros((n,), jnp.float32),
+        init_prices,
     )
     state, _ = jax.lax.scan(phase, state, _eps_schedule(W, num_phases))
-    row2col, col2row, _ = state
+    row2col, col2row, prices = state
     converged = (row2col >= 0).all()
-    return _complete_greedy(row2col, col2row), converged
+    perm = _complete_greedy(row2col, col2row)
+    if with_prices:
+        return perm, converged, prices
+    return perm, converged
 
 
-@functools.partial(jax.jit, static_argnames=("num_phases", "max_iters", "use_kernel"))
+@functools.partial(
+    jax.jit, static_argnames=("num_phases", "max_iters", "use_kernel", "with_prices")
+)
 def match_auction_fr(
     W: jax.Array,
     *,
     num_phases: int | None = None,
     max_iters: int | None = None,
     use_kernel: bool = False,
-) -> tuple[jax.Array, jax.Array]:
+    prices0: jax.Array | None = None,
+    with_prices: bool = False,
+) -> tuple[jax.Array, ...]:
     """Combined forward-reverse auction. Returns ``(perm, converged)``.
 
     Rows and columns take turns bidding; the side flips whenever a round
     grows the assignment (Bertsekas-Castañón switching rule — the matched
-    count never shrinks, so alternation cannot cycle).
+    count never shrinks, so alternation cannot cycle). ``prices0`` /
+    ``with_prices`` behave as on ``match_auction`` (warm-started column
+    prices in, final prices out).
     """
     W = W.astype(jnp.float32)
     n = W.shape[0]
@@ -213,6 +283,11 @@ def match_auction_fr(
         num_phases = default_num_phases(n)
     if max_iters is None:
         max_iters = default_max_iters(n)
+    init_prices = (
+        jnp.zeros((n,), jnp.float32)
+        if prices0 is None
+        else jnp.asarray(prices0, jnp.float32)
+    )
 
     def phase(state, eps):
         _, _, prices, profits = state
@@ -243,13 +318,16 @@ def match_auction_fr(
     state = (
         jnp.full((n,), -1, jnp.int32),
         jnp.full((n,), -1, jnp.int32),
-        jnp.zeros((n,), jnp.float32),
+        init_prices,
         jnp.zeros((n,), jnp.float32),
     )
     state, _ = jax.lax.scan(phase, state, _eps_schedule(W, num_phases))
-    row2col, col2row, _, _ = state
+    row2col, col2row, prices, _ = state
     converged = (row2col >= 0).all()
-    return _complete_greedy(row2col, col2row), converged
+    perm = _complete_greedy(row2col, col2row)
+    if with_prices:
+        return perm, converged, prices
+    return perm, converged
 
 
 # --------------------------------------------------------------- registry
@@ -274,7 +352,10 @@ def list_matchers() -> list[str]:
 
 def register_matcher(name: str, fn: MatcherFn, *, overwrite: bool = False) -> None:
     """Add a device matcher: ``fn(W, *, num_phases, max_iters, use_kernel)
-    -> (perm, converged)``, jittable and vmappable."""
+    -> (perm, converged)``, jittable and vmappable. Matchers that support
+    warm starts additionally accept ``prices0`` (initial dual prices) and
+    ``with_prices=True`` (append final prices to the return) — the online
+    controller only requests those from matchers that advertise them."""
     if name in MATCHERS and not overwrite:
         raise ValueError(f"matcher {name!r} already registered")
     replacing = name in MATCHERS
@@ -282,8 +363,13 @@ def register_matcher(name: str, fn: MatcherFn, *, overwrite: bool = False) -> No
     if replacing:
         # Jitted consumers resolve the name at trace time and key their
         # caches on the string — drop them so the replacement takes effect.
-        from .decompose_jax import decompose_jax
+        from .decompose_jax import decompose_jax, decompose_jax_prices
         from .e2e import spectra_jax_e2e, spectra_jax_e2e_many
+        from .online_jax import online_step_jax, spectra_online_scan
 
-        for jitted in (decompose_jax, spectra_jax_e2e, spectra_jax_e2e_many):
+        for jitted in (
+            decompose_jax, decompose_jax_prices,
+            spectra_jax_e2e, spectra_jax_e2e_many,
+            online_step_jax, spectra_online_scan,
+        ):
             jitted.clear_cache()

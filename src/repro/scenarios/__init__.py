@@ -30,13 +30,20 @@ from .registry import (
     register_family,
     register_scenario,
 )
-from .runner import PeriodResult, ScenarioReport, run_scenario
+from .runner import (
+    OnlinePeriod,
+    OnlineReport,
+    PeriodResult,
+    ScenarioReport,
+    run_scenario,
+)
 from .spec import DemandTrace, TrafficSpec
 
 from . import library  # noqa: E402,F401  (registers the built-in scenarios)
 
 __all__ = [
-    "DemandTrace", "PeriodResult", "Scenario", "ScenarioReport", "TrafficSpec",
+    "DemandTrace", "OnlinePeriod", "OnlineReport", "PeriodResult", "Scenario",
+    "ScenarioReport", "TrafficSpec",
     "get_family", "get_scenario", "list_families", "list_scenarios",
     "make_trace", "register_family", "register_scenario", "run_scenario",
 ]

@@ -69,6 +69,19 @@ class Scenario:
         """
         spec = self.spec.replace(**overrides) if overrides else self.spec
         fn = get_family(spec.family)
+        # δ is a spec field, not a family knob, so a delta_schedule would be
+        # silently ignored by the generators — resolve it here instead
+        # (cycled per period, recorded in period_meta, pinnable by passing
+        # delta_schedule=None).
+        delta_schedule = spec.params.get("delta_schedule")
+        if delta_schedule is not None:
+            if not len(delta_schedule):
+                raise ValueError("delta_schedule must not be empty")
+            if any(d < 0 for d in delta_schedule):
+                raise ValueError(
+                    f"delta_schedule entries must be nonnegative, got "
+                    f"{tuple(delta_schedule)}"
+                )
         demands = np.zeros((spec.periods, spec.n, spec.n), dtype=np.float64)
         metas: list[dict] = []
         for t in range(spec.periods):
@@ -83,6 +96,10 @@ class Scenario:
                 )
             demands[t] = D
             metas.append({"period": t, "seed": spec.seed + t, **meta})
+            if delta_schedule is not None:
+                metas[-1]["delta"] = float(
+                    delta_schedule[t % len(delta_schedule)]
+                )
         return DemandTrace(spec=spec, demands=demands, period_meta=metas)
 
 

@@ -47,10 +47,17 @@ class ScenarioReport:
     reports: list[SolveReport]       # per-period SolveReports, trace order
     periods: list[PeriodResult]
     unit_s: float                    # seconds per demand unit (NaN: unit trace)
-    delta_units: float               # δ the solver actually saw, in units
+    delta_units: Any                 # δ in units: scalar, or (T,) for δ sweeps
     num_shape_buckets: int           # solve_many dispatch groups (1 per shape)
     runtime_s: float                 # wall time of the solve_many call
     quality_ref: str | None = None   # reference solver of the quality ratios
+
+    @property
+    def deltas_units(self) -> np.ndarray:
+        """Per-period δ in units, shape (T,) — broadcast when constant."""
+        return np.broadcast_to(
+            np.asarray(self.delta_units, dtype=np.float64), (self.trace.T,)
+        )
 
     @property
     def makespans(self) -> np.ndarray:
@@ -123,6 +130,110 @@ class ScenarioReport:
         }
 
 
+@dataclass
+class OnlinePeriod:
+    """One controller period of the *online* (stateful) pass."""
+
+    period: int
+    makespan: float            # credit-aware effective makespan
+    stateless_makespan: float  # the same period's stateless baseline
+    reuse_count: int           # switches serving a carried config δ-free
+    delta_paid: float          # δ · (configs − reuse_count)
+    delta_avoided: float       # δ · reuse_count
+    warm: bool                 # warm-start decomposition used
+    num_configs: int
+    schedule: Any = None       # ParallelSchedule in reuse serve order
+    demand_met: bool | None = None  # online simulator verdict
+
+    @property
+    def ratio(self) -> float:
+        """online / stateless makespan (≤ 1 + float tolerance)."""
+        return (
+            self.makespan / self.stateless_makespan
+            if self.stateless_makespan
+            else 1.0
+        )
+
+
+@dataclass
+class OnlineReport(ScenarioReport):
+    """``ScenarioReport`` plus the stateful (online) pass over the trace.
+
+    The base fields describe the stateless per-period solve — the baseline.
+    ``online_periods`` carries the stateful controller's outcomes: per
+    period, the reuse credit earned (δ avoided), δ actually paid, and the
+    effective makespan, which is ≤ the stateless makespan by construction
+    (the stateless schedule with the credit applied post-hoc is always a
+    candidate).
+    """
+
+    online_periods: list[OnlinePeriod] = field(default_factory=list)
+    online_runtime_s: float = float("nan")
+    online_solver: str = ""          # "host" (controller) or "scan" (device)
+
+    @property
+    def online_makespans(self) -> np.ndarray:
+        return np.array([p.makespan for p in self.online_periods])
+
+    @property
+    def online_ratios(self) -> np.ndarray:
+        """Per-period online / stateless makespan ratios."""
+        return np.array([p.ratio for p in self.online_periods])
+
+    @property
+    def reuse_counts(self) -> np.ndarray:
+        return np.array([p.reuse_count for p in self.online_periods])
+
+    @property
+    def total_reuse(self) -> int:
+        return int(self.reuse_counts.sum())
+
+    @property
+    def total_delta_avoided(self) -> float:
+        return float(sum(p.delta_avoided for p in self.online_periods))
+
+    @property
+    def total_delta_paid(self) -> float:
+        return float(sum(p.delta_paid for p in self.online_periods))
+
+    @property
+    def total_improvement(self) -> float:
+        """Σ_t (stateless − online) makespan over the trace (≥ 0)."""
+        return float(
+            sum(p.stateless_makespan - p.makespan for p in self.online_periods)
+        )
+
+    def online_summary(self) -> dict[str, Any]:
+        base = self.summary()
+        mk = self.online_makespans
+        base.update(
+            online_solver=self.online_solver,
+            online_mean_makespan=float(mk.mean()) if len(mk) else float("nan"),
+            online_total_makespan=float(mk.sum()) if len(mk) else float("nan"),
+            stateless_total_makespan=float(
+                sum(p.stateless_makespan for p in self.online_periods)
+            ),
+            total_reuse=self.total_reuse,
+            total_delta_avoided=self.total_delta_avoided,
+            total_delta_paid=self.total_delta_paid,
+            mean_online_ratio=(
+                float(self.online_ratios.mean())
+                if len(self.online_periods)
+                else float("nan")
+            ),
+            online_runtime_s=self.online_runtime_s,
+        )
+        return base
+
+
+# Registry-name sugar: run_scenario(solver="spectra_online[_jax]") implies
+# online=True with the matching stateless baseline solver.
+_ONLINE_SOLVER_ALIASES = {
+    "spectra_online": "spectra",
+    "spectra_online_jax": "spectra_jax",
+}
+
+
 def run_scenario(
     scenario: str | Scenario | DemandTrace,
     *,
@@ -131,6 +242,7 @@ def run_scenario(
     simulate: bool = False,
     processes: int | None = None,
     quality_ref: str | None = None,
+    online: bool = False,
     **overrides: Any,
 ) -> ScenarioReport:
     """Schedule a whole scenario trace with one batched ``solve_many`` call.
@@ -148,6 +260,14 @@ def run_scenario(
     aggregates (``quality_ratios`` / ``geomean_quality_ratio`` /
     ``max_quality_ratio``, plus ``summary()["quality_ratio"]``) compare
     against it.
+
+    ``online=True`` (or ``solver="spectra_online[_jax]"``) additionally runs
+    the *stateful* cross-period controller over the trace — host
+    ``repro.online.OnlineController`` for numpy solvers, the single-dispatch
+    ``lax.scan`` rolling solve for ``spectra_jax`` — and returns an
+    ``OnlineReport`` whose base fields stay the stateless baseline. A
+    ``delta_schedule`` on the scenario threads per-period δ through both
+    passes.
     """
     if isinstance(scenario, DemandTrace):
         if overrides:
@@ -158,6 +278,8 @@ def run_scenario(
         trace, name = sc.trace(**overrides), sc.name
     spec = trace.spec
     options = options or SolveOptions()
+    if solver in _ONLINE_SOLVER_ALIASES:
+        online, solver = True, _ONLINE_SOLVER_ALIASES[solver]
 
     units, unit_s, delta_units = trace.normalized()
     t0 = time.perf_counter()
@@ -203,7 +325,7 @@ def run_scenario(
     # solve_many applied to the actual submission.
     from ..api.batch import shape_buckets
 
-    return ScenarioReport(
+    base = dict(
         scenario=name,
         solver=solver,
         spec=spec,
@@ -216,3 +338,203 @@ def run_scenario(
         runtime_s=runtime_s,
         quality_ref=quality_ref,
     )
+    if not online:
+        return ScenarioReport(**base)
+
+    online_periods, online_runtime_s, mode = _run_online(
+        trace, units, delta_units, reports, options,
+        simulate=simulate, solver=solver,
+    )
+    return OnlineReport(
+        **base,
+        online_periods=online_periods,
+        online_runtime_s=online_runtime_s,
+        online_solver=mode,
+    )
+
+
+def _run_online(
+    trace: DemandTrace,
+    units: np.ndarray,
+    delta_units,
+    stateless: list[SolveReport],
+    options: SolveOptions,
+    *,
+    simulate: bool,
+    solver: str,
+) -> tuple[list[OnlinePeriod], float, str]:
+    """The stateful pass: host controller loop or device ``lax.scan``.
+
+    Whatever the backend produced, every period is re-priced and clamped
+    here against the TRUE stateless baseline (the batched ``stateless``
+    reports) along one sequential replay chain: the backend's candidate and
+    the stateless schedule with the reuse credit applied post-hoc are both
+    evaluated against the *reported* installed state, and the better one is
+    kept. This pins ``online ≤ stateless`` per period by construction even
+    when a warm-start decomposition (a different decomposition than the
+    baseline's) slipped past the quality gate, and keeps the credit
+    accounting consistent with the replayed chain.
+    """
+    from ..online import (
+        SwitchState,
+        advance_installed,
+        apply_reuse_order,
+        effective_loads,
+    )
+
+    spec = trace.spec
+    deltas = np.broadcast_to(
+        np.asarray(delta_units, dtype=np.float64), (trace.T,)
+    )
+    device = solver == "spectra_jax"
+    t0 = time.perf_counter()
+    if device:
+        rows = _online_scan_rows(trace, units, deltas, options)
+    else:
+        rows = _online_host_rows(trace, units, deltas, stateless, options)
+    online_runtime_s = time.perf_counter() - t0
+
+    tol = options.tol("jax" if device else "numpy")
+    periods: list[OnlinePeriod] = []
+    installed = [None] * spec.s  # the reported replay chain
+    for t, (sched, _marks, row) in enumerate(rows):
+        state = SwitchState(installed=installed)
+        cand, cand_marks = apply_reuse_order(sched, state)
+        cand_mk = float(effective_loads(cand, cand_marks).max())
+        base, base_marks = apply_reuse_order(stateless[t].schedule, state)
+        base_mk = float(effective_loads(base, base_marks).max())
+        if cand_mk <= base_mk:
+            chosen, marks, mk = cand, cand_marks, cand_mk
+        else:
+            chosen, marks, mk = base, base_marks, base_mk
+        reuse_count = int(marks.sum())
+        num_configs = chosen.num_configs()
+        d = float(deltas[t])
+        row = dict(
+            row,
+            makespan=mk,
+            stateless_makespan=float(stateless[t].makespan),
+            reuse_count=reuse_count,
+            delta_avoided=d * reuse_count,
+            delta_paid=d * (num_configs - reuse_count),
+            num_configs=num_configs,
+        )
+        if options.validate:
+            chosen.validate(units[t], tol=tol)
+        demand_met = None
+        if simulate:
+            from ..fabric.simulator import simulate as sim
+
+            demand_met = bool(
+                sim(chosen, units[t], tol=tol, installed=installed).demand_met
+            )
+        installed = advance_installed(chosen, state, marks)
+        periods.append(
+            OnlinePeriod(
+                period=t,
+                schedule=chosen,
+                demand_met=demand_met,
+                **row,
+            )
+        )
+    return periods, online_runtime_s, "scan" if device else "host"
+
+
+def _online_host_rows(trace, units, deltas, stateless, options):
+    """Host controller over the trace, donating the batched stateless
+    schedules/decompositions as the baseline candidates."""
+    from ..online import OnlineController
+
+    spec = trace.spec
+    ctl = OnlineController(
+        s=spec.s,
+        delta=float(deltas[0]),
+        warm_start=bool(options.extra.get("warm_start", True)),
+        warm_slack=float(options.extra.get("warm_slack", 0.05)),
+        merge_aware=bool(options.extra.get("merge_aware", False)),
+        do_equalize=bool(options.extra.get("equalize", True)),
+    )
+    rows = []
+    for t in range(trace.T):
+        out = ctl.step(
+            units[t],
+            delta=float(deltas[t]),
+            stateless=stateless[t].schedule,
+            decomposition=stateless[t].decomposition,
+        )
+        rows.append(
+            (
+                out.schedule,
+                out.reused_switches,
+                dict(
+                    makespan=out.makespan,
+                    stateless_makespan=out.stateless_makespan,
+                    reuse_count=out.reuse_count,
+                    delta_paid=out.delta_paid,
+                    delta_avoided=out.delta_avoided,
+                    warm=out.warm,
+                    num_configs=out.num_configs,
+                ),
+            )
+        )
+    return rows
+
+
+def _online_scan_rows(trace, units, deltas, options):
+    """Device rolling solve: the whole trace in ONE ``lax.scan`` dispatch."""
+    import jax
+
+    from ..core.jaxopt.matching import default_matcher
+    from ..core.jaxopt.online_jax import spectra_online_scan
+    from ..core.schedule_ir import DeviceSchedule
+    from ..online import online_ir_to_schedule
+
+    spec = trace.spec
+    res, _ = spectra_online_scan(
+        units.astype(np.float32),
+        spec.s,
+        deltas.astype(np.float32),
+        use_kernel=bool(options.extra.get("use_kernel", False)),
+        do_equalize=bool(options.extra.get("equalize", True)),
+        merge_aware=bool(options.extra.get("merge_aware", False)),
+        extra_slots=int(options.extra.get("extra_slots", 64)),
+        matcher=str(options.extra.get("matcher") or default_matcher(trace.n)),
+        repair_rounds=int(options.extra.get("repair_rounds", 0)),
+        warm_start=bool(options.extra.get("warm_start", True)),
+        warm_prices=bool(options.extra.get("warm_prices", False)),
+        warm_slack=float(options.extra.get("warm_slack", 0.05)),
+    )
+    jax.block_until_ready(res.makespan)
+    perms = np.asarray(res.schedule.perms)
+    alphas = np.asarray(res.schedule.alphas, dtype=np.float64)
+    switch = np.asarray(res.schedule.switch)
+    reused = np.asarray(res.reused)
+    makespans = np.asarray(res.makespan, dtype=np.float64)
+    stateless_mks = np.asarray(res.stateless_makespan, dtype=np.float64)
+    reuse_counts = np.asarray(res.reuse_count)
+    warms = np.asarray(res.warm)
+    rows = []
+    for t in range(trace.T):
+        ds = DeviceSchedule(
+            perms=perms[t], alphas=alphas[t], switch=switch[t],
+            delta=float(deltas[t]),
+        )
+        sched, marks = online_ir_to_schedule(ds, spec.s, reused[t])
+        num_configs = int((switch[t] >= 0).sum())
+        rc = int(reuse_counts[t])
+        rows.append(
+            (
+                sched,
+                marks,
+                dict(
+                    makespan=float(makespans[t]),
+                    stateless_makespan=float(stateless_mks[t]),
+                    reuse_count=rc,
+                    delta_paid=float(deltas[t]) * (num_configs - rc),
+                    delta_avoided=float(deltas[t]) * rc,
+                    warm=bool(warms[t]),
+                    num_configs=num_configs,
+                ),
+            )
+        )
+    return rows

@@ -36,7 +36,15 @@ _UNITS = ("demand", "bytes")
 
 @dataclass(frozen=True)
 class TrafficSpec:
-    """Declarative spec of one scenario: family, sizes, δ, units, T, seed."""
+    """Declarative spec of one scenario: family, sizes, δ, units, T, seed.
+
+    ``params["delta_schedule"]`` makes δ itself time-varying: the sequence
+    is cycled per period by ``Scenario.trace`` (resolved values land in
+    ``period_meta[t]["delta"]`` / ``DemandTrace.deltas``), overriding the
+    scalar ``delta`` field; pass ``delta_schedule=None`` to pin the scalar
+    back. Byte-denominated traces reject a varying δ (the fabric's physical
+    reconfiguration delay is one number).
+    """
 
     family: str                 # generator family in scenarios.registry
     n: int                      # ports (racks)
@@ -104,6 +112,25 @@ class DemandTrace:
     def n(self) -> int:
         return int(self.demands.shape[1])
 
+    @property
+    def deltas(self) -> np.ndarray:
+        """Per-period reconfiguration delay, shape (T,).
+
+        Constant ``spec.delta`` unless the scenario registered a
+        ``delta_schedule`` (cycled per period by ``Scenario.trace``, which
+        records the resolved value in ``period_meta[t]["delta"]``).
+        """
+        return np.array(
+            [m.get("delta", self.spec.delta) for m in self.period_meta],
+            dtype=np.float64,
+        )
+
+    @property
+    def varying_delta(self) -> bool:
+        """True when a ``delta_schedule`` makes δ differ across periods."""
+        d = self.deltas
+        return bool(len(d)) and bool((d != d[0]).any())
+
     def __len__(self) -> int:
         return self.T
 
@@ -121,7 +148,7 @@ class DemandTrace:
             num_switches=self.spec.s, reconfig_delay_s=self.spec.delta, **kw
         )
 
-    def normalized(self) -> tuple[np.ndarray, float, float]:
+    def normalized(self) -> tuple[np.ndarray, float, float | np.ndarray]:
         """Whole-trace bytes→units conversion: (units stack, unit_s, δ_units).
 
         Delegates the scale math to ``OCSFabric.normalize`` over the entire
@@ -130,9 +157,24 @@ class DemandTrace:
         ``solve_many`` can treat it as one uniform batch. All-zero traces
         inherit the fabric's contract: ``unit_s = 0.0``, ``δ_units = 0.0``
         (nothing to serve, no reconfigurations needed).
+
+        A ``delta_schedule`` (trace-aware δ sweep) returns δ_units as the
+        per-period (T,) vector instead of a scalar — nothing downstream may
+        silently collapse it. Byte traces reject per-period δ with a clear
+        error: the fabric's physical reconfiguration delay is one number,
+        and pretending otherwise would silently mis-price every period.
         """
         if self.spec.units != "bytes":
+            if self.varying_delta:
+                return self.demands, float("nan"), self.deltas
             return self.demands, float("nan"), self.spec.delta
+        if self.varying_delta:
+            raise ValueError(
+                "per-period delta_schedule is not supported for "
+                "byte-denominated traces: δ is the fabric's physical "
+                "reconfiguration delay (one value); drop the schedule or "
+                "use units='demand'"
+            )
         fabric = self.fabric()
         units, unit_s = fabric.normalize(self.demands)
         return units, unit_s, fabric.delta_units(unit_s)

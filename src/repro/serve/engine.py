@@ -15,6 +15,9 @@ instances and drains them through the unified ``repro.api.solve_many``. On
 the JAX backend each group runs the *fused* DECOMPOSE→SCHEDULE→EQUALIZE
 pipeline in one vmapped device call (host schedules materialize lazily per
 ticket); numpy solvers loop, optionally across worker processes.
+``open_session`` switches to *stateful* (online) mode: switch
+configurations carry across calls, matching rounds are served δ-free, and
+decompositions warm-start from the previous period.
 """
 
 from __future__ import annotations
@@ -135,6 +138,14 @@ class SolverService:
                 "trace is denominated in bytes; normalize it to demand units "
                 "(DemandTrace.normalized or run_scenario) before submitting"
             )
+        if getattr(trace, "varying_delta", False):
+            # The service solves every ticket at its single scalar delta; a
+            # per-period delta_schedule would be silently flattened to it.
+            raise ValueError(
+                "trace carries a per-period delta_schedule but the service "
+                "solves at one delta; use repro.scenarios.run_scenario (or "
+                "solve_many with a per-instance delta vector) instead"
+            )
         demands = np.asarray(getattr(trace, "demands", trace), dtype=np.float64)
         if demands.ndim != 3 or demands.shape[1] != demands.shape[2]:
             raise ValueError(
@@ -165,3 +176,111 @@ class SolverService:
             self._queue = list(pending) + self._queue
             raise
         return {ticket: rep for (ticket, _), rep in zip(pending, reports)}
+
+    def open_session(self, *, solver: str | None = None) -> "OnlineSession":
+        """Open a *stateful* scheduling session (online cross-period mode).
+
+        Unlike ``submit``/``flush`` — which treats every matrix as an
+        independent instance — a session carries the switch state between
+        calls: each ``step`` pays no δ for configurations left installed by
+        the previous one, and warm-starts its decomposition from it. Periods
+        are inherently sequential (state threads through), so a session
+        solves per call rather than batching.
+
+        ``solver`` defaults to the online variant of the service's solver
+        (``spectra → spectra_online``, ``spectra_jax →
+        spectra_online_jax``); any registered ``spectra_online*`` name is
+        accepted.
+        """
+        if solver is None:
+            solver = {
+                "spectra": "spectra_online",
+                "spectra_jax": "spectra_online_jax",
+            }.get(self.solver, "spectra_online")
+        return OnlineSession(
+            s=self.s, delta=self.delta, solver=solver, options=self.options
+        )
+
+
+@dataclass
+class OnlineSession:
+    """A stateful solver session: one controller period per ``step``.
+
+    Thin wrapper over the ``spectra_online[_jax]`` registry solvers that
+    threads ``SolveOptions.extra["online"]`` automatically. ``reports``
+    keeps the per-period history; ``total_delta_avoided`` totals the reuse
+    credit earned so far.
+    """
+
+    s: int
+    delta: float
+    solver: str = "spectra_online"
+    options: SolveOptions = field(default_factory=SolveOptions)
+
+    def __post_init__(self) -> None:
+        self._state = None
+        self.reports: list[SolveReport] = []
+
+    def __len__(self) -> int:
+        return len(self.reports)
+
+    @property
+    def state(self):
+        """The carried switch state (None before the first step)."""
+        return self._state
+
+    @property
+    def total_delta_avoided(self) -> float:
+        return float(
+            sum(r.extras.get("delta_avoided", 0.0) for r in self.reports)
+        )
+
+    def step(self, D: np.ndarray) -> SolveReport:
+        """Schedule one period against the carried state and advance it."""
+        from ..api import Problem, solve
+
+        D = np.asarray(D, dtype=np.float64)
+        extra = dict(self.options.extra)
+        extra["online"] = self._state
+        options = SolveOptions(
+            validate=self.options.validate,
+            validate_tol=self.options.validate_tol,
+            compute_lb=self.options.compute_lb,
+            extra=extra,
+        )
+        report = solve(
+            Problem(D, self.s, self.delta), solver=self.solver, options=options
+        )
+        self._state = report.extras["online_state"]
+        self.reports.append(report)
+        return report
+
+    def run(self, trace) -> list[SolveReport]:
+        """Step through a whole trace (``DemandTrace`` or (T, n, n) array).
+
+        The session solves every period at its single scalar ``delta`` in
+        demand units, so — exactly like ``SolverService.submit_trace`` —
+        byte-denominated traces and per-period ``delta_schedule`` traces are
+        rejected with a clear error rather than silently mis-priced.
+        """
+        spec = getattr(trace, "spec", None)
+        if spec is not None and getattr(spec, "units", "demand") == "bytes":
+            raise ValueError(
+                "trace is denominated in bytes; normalize it to demand units "
+                "(DemandTrace.normalized or run_scenario) before stepping a "
+                "session through it"
+            )
+        if getattr(trace, "varying_delta", False):
+            raise ValueError(
+                "trace carries a per-period delta_schedule but the session "
+                "solves at one delta; use repro.scenarios.run_scenario(..., "
+                "online=True) instead"
+            )
+        demands = np.asarray(
+            getattr(trace, "demands", trace), dtype=np.float64
+        )
+        if demands.ndim != 3 or demands.shape[1] != demands.shape[2]:
+            raise ValueError(
+                f"trace must be a (T, n, n) demand stack, got {demands.shape}"
+            )
+        return [self.step(D) for D in demands]
