@@ -13,6 +13,9 @@ entries end-to-end through ``run_scenario`` (whole trace → one batched
 overriding the trace length. ``--online`` additionally runs the stateful
 cross-period controller over each trace and exits 1 if any online period
 comes out worse than its stateless baseline (the CI online gate).
+``--flowsim`` replays each trace at the flow level for both ``--solver``
+and the ``rotor_vlb`` baseline, prints FCT percentiles, and exits 1 if any
+period fails bytes conservation (the CI flowsim gate).
 ``--fast`` shrinks scenario mode to tiny (n=8, T=3) variants — the
 smoke-lane configuration.
 
@@ -28,12 +31,17 @@ import sys
 
 def _run_scenarios(
     names: list[str], solver: str, periods: int | None, fast: bool,
-    online: bool = False,
+    online: bool = False, flowsim: bool = False,
 ) -> None:
     from repro.scenarios import list_scenarios, run_scenario
 
     if names == ["all"]:
         names = list_scenarios()
+    # Flowsim mode compares the requested solver against the oblivious
+    # rotor+VLB baseline on every trace (deduped if they coincide).
+    solvers = [solver]
+    if flowsim and "rotor_vlb" not in solvers:
+        solvers.append("rotor_vlb")
     overrides: dict = {}
     if fast:
         overrides.update(n=8, periods=3)
@@ -42,40 +50,66 @@ def _run_scenarios(
     print("name,us_per_call,derived")
     failures = 0
     for name in names:
-        try:
-            rep = run_scenario(name, solver=solver, online=online, **overrides)
-        except Exception as exc:
-            print(f"scenario_{name},nan,ERROR:{type(exc).__name__}:{exc}")
-            failures += 1
-            continue
-        s = rep.summary()
-        derived = (
-            f"T={s['periods']};n={s['n']};mean_mk={s['mean_makespan']:.4f};"
-            f"gap={s['geomean_gap']:.3f};buckets={s['buckets']}"
-        )
-        if rep.spec.units == "bytes":
-            derived += f";cct_s={s['total_cct_s']:.4g}"
-        if online:
-            o = rep.online_summary()
-            derived += (
-                f";online_mk={o['online_total_makespan']:.4f};"
-                f"stateless_mk={o['stateless_total_makespan']:.4f};"
-                f"reuse={o['total_reuse']};"
-                f"d_avoided={o['total_delta_avoided']:.4f}"
+        for sv in solvers:
+            failures += _run_one_scenario(
+                run_scenario, name, sv, overrides,
+                online=online, flowsim=flowsim,
             )
-            # The structural guarantee this mode gates in CI: no online
-            # period may come out worse than its stateless baseline.
-            bad = [
-                p.period for p in rep.online_periods
-                if p.makespan > p.stateless_makespan * (1 + 1e-6) + 1e-9
-            ]
-            if bad:
-                derived += f";VIOLATION_periods={bad}"
-                failures += 1
-        print(f"scenario_{name},{1e6 * s['runtime_s'] / max(s['periods'], 1):.0f},{derived}")
-        sys.stdout.flush()
     if failures:  # scenario mode gates CI — a broken scenario must fail the job
         sys.exit(1)
+
+
+def _run_one_scenario(
+    run_scenario, name: str, solver: str, overrides: dict,
+    *, online: bool, flowsim: bool,
+) -> int:
+    """Run one (scenario, solver) pair; print its CSV row; return #failures."""
+    try:
+        rep = run_scenario(
+            name, solver=solver, online=online, flowsim=flowsim, **overrides
+        )
+    except Exception as exc:
+        print(f"scenario_{name}_{solver},nan,ERROR:{type(exc).__name__}:{exc}")
+        return 1
+    failures = 0
+    s = rep.summary()
+    derived = (
+        f"T={s['periods']};n={s['n']};mean_mk={s['mean_makespan']:.4f};"
+        f"gap={s['geomean_gap']:.3f};buckets={s['buckets']}"
+    )
+    if rep.spec.units == "bytes":
+        derived += f";cct_s={s['total_cct_s']:.4g}"
+    if flowsim:
+        fs = rep.flowsim_summary()
+        derived += (
+            f";fct_p50={fs['fct_p50']:.4f};fct_p99={fs['fct_p99']:.4f};"
+            f"indirect={fs['indirect_frac']:.3f};conserved={fs['conserved']}"
+        )
+        # The structural guarantee this mode gates in CI: every byte of
+        # every period's demand must be delivered.
+        if not fs["conserved"]:
+            derived += f";VIOLATION_residual={fs['residual']:.3g}"
+            failures += 1
+    if online:
+        o = rep.online_summary()
+        derived += (
+            f";online_mk={o['online_total_makespan']:.4f};"
+            f"stateless_mk={o['stateless_total_makespan']:.4f};"
+            f"reuse={o['total_reuse']};"
+            f"d_avoided={o['total_delta_avoided']:.4f}"
+        )
+        # The structural guarantee this mode gates in CI: no online
+        # period may come out worse than its stateless baseline.
+        bad = [
+            p.period for p in rep.online_periods
+            if p.makespan > p.stateless_makespan * (1 + 1e-6) + 1e-9
+        ]
+        if bad:
+            derived += f";VIOLATION_periods={bad}"
+            failures += 1
+    print(f"scenario_{name}_{solver},{1e6 * s['runtime_s'] / max(s['periods'], 1):.0f},{derived}")
+    sys.stdout.flush()
+    return failures
 
 
 def _run_figures() -> None:
@@ -86,6 +120,7 @@ def _run_figures() -> None:
         fig9_benchmark,
         fig10_sparsity,
         fig11_degree,
+        fig_flowsim,
         fig_online,
         improved_table,
         runtime_table,
@@ -99,6 +134,7 @@ def _run_figures() -> None:
         fig10_sparsity,
         fig11_degree,
         fig_online,
+        fig_flowsim,
         runtime_table,
         improved_table,
     ]
@@ -135,13 +171,17 @@ def main(argv: list[str] | None = None) -> None:
                     help="scenario mode: run the stateful cross-period "
                          "controller too; exit 1 if any online period is "
                          "worse than its stateless baseline")
+    ap.add_argument("--flowsim", action="store_true",
+                    help="scenario mode: flow-level replay of --solver and "
+                         "the rotor_vlb baseline; exit 1 if any period "
+                         "fails bytes conservation")
     args = ap.parse_args(argv)
 
     if args.fast:
         os.environ["REPRO_BENCH_FAST"] = "1"
     if args.scenario:
         _run_scenarios(args.scenario, args.solver, args.periods, args.fast,
-                       online=args.online)
+                       online=args.online, flowsim=args.flowsim)
     else:
         _run_figures()
 

@@ -145,3 +145,64 @@ def eclipse_decompose(
         dec.alphas.extend(tail.alphas)
     dec.alphas = refine_greedy(D, dec.alphas, dec.perms)
     return dec
+
+
+# ---------------------------------------------------------------------------
+# ROTOR: demand-oblivious round-robin permutation sequences (RotorNet-style).
+# ---------------------------------------------------------------------------
+
+def rotor_offsets(
+    n: int, s: int, *, include_identity: bool = False
+) -> list[list[int]]:
+    """Round-robin assignment of cyclic-shift offsets to s switches.
+
+    The full rotor cycle is the n−1 cyclic shifts ``src → (src+k) mod n``
+    for k = 1..n−1 (every ordered pair of distinct ports is connected by
+    exactly one shift); switch h serves offsets ``h, h+s, h+2s, …`` of
+    that sequence. ``include_identity`` prepends k = 0 — only needed when
+    the demand has intra-rack (diagonal) entries, which only the identity
+    configuration can serve.
+    """
+    if n < 2:
+        raise ValueError(f"need at least two ports, got n={n}")
+    if s < 1:
+        raise ValueError(f"need at least one switch, got s={s}")
+    offs = ([0] if include_identity else []) + list(range(1, n))
+    return [offs[h::s] for h in range(s)]
+
+
+def rotor_schedule(
+    n: int,
+    s: int,
+    delta: float,
+    slot: float,
+    *,
+    cycles: int = 1,
+    include_identity: bool = False,
+) -> ParallelSchedule:
+    """Fixed round-robin rotor schedule: no matching solves, equal slots.
+
+    Each switch cycles through its ``rotor_offsets`` shifts ``cycles``
+    times, serving every configuration for exactly ``slot`` time units
+    (paying δ before each — a rotor reconfigures blindly, it has no
+    demand knowledge to reuse circuits with). Per full cycle, every
+    ordered port pair gets exactly ``slot`` units of direct service, so
+    the per-switch load — and the makespan, since the assignment is
+    perfectly balanced up to one slot — has the closed form
+
+        makespan = max_h |offsets_h| · cycles · (slot + δ).
+    """
+    if slot < 0:
+        raise ValueError(f"slot must be nonnegative, got {slot}")
+    if cycles < 1:
+        raise ValueError(f"need at least one cycle, got {cycles}")
+    base = np.arange(n)
+    switches = []
+    for offs in rotor_offsets(n, s, include_identity=include_identity):
+        sw = SwitchSchedule()
+        for _ in range(cycles):
+            for k in offs:
+                sw.perms.append((base + k) % n)
+                sw.alphas.append(float(slot))
+        switches.append(sw)
+    return ParallelSchedule(switches=switches, delta=delta)

@@ -6,6 +6,11 @@ schedule's claimed makespan, and (b) at no instant does any switch serve
 more than one circuit per input/output port (guaranteed by permutations but
 re-checked independently here).
 
+The (δ → α) event construction itself lives in ``repro.fabric.timeline``
+— the one source of truth for circuit timing, shared with the flow-level
+simulator in ``repro.flowsim`` — so matrix replay here and flow replay
+there can never disagree about when a circuit is up.
+
 Online replay: ``installed`` carries the configurations left on the
 switches by the previous controller period. A switch whose *first*
 configuration equals its installed permutation serves it without paying δ —
@@ -22,15 +27,25 @@ from typing import Sequence
 import numpy as np
 
 from ..core.schedule import ParallelSchedule
+from .timeline import build_timeline
 
 
 @dataclass
 class SimReport:
+    """Matrix-granularity replay verdict.
+
+    ``reused_switches`` is always a well-defined per-switch bool array of
+    shape ``(s,)``: which switches served their first configuration δ-free
+    against a carried ``installed`` state. A stateless replay (no
+    ``installed``) has nothing to reuse, so the contract is **all-False**
+    — never ``None`` — letting consumers sum or index it unconditionally.
+    """
+
     finish_time: float
     served: np.ndarray
     demand_met: bool
     max_shortfall: float
-    reused_switches: np.ndarray | None = None  # per-switch δ-free first config
+    reused_switches: np.ndarray = None  # (s,) bool; zeros for stateless replay
 
 
 def simulate(
@@ -56,42 +71,18 @@ def simulate(
     D = np.asarray(D, dtype=np.float64)
     n = D.shape[0]
     rows = np.arange(n)
-    if installed is not None and len(installed) != sched.s:
-        raise ValueError(
-            f"need one installed permutation (or None) per switch: "
-            f"got {len(installed)} for s={sched.s}"
-        )
+    tl = build_timeline(sched, installed=installed, tol=tol)
     served = np.zeros_like(D)
-    finish = 0.0
-    reused = np.zeros(sched.s, dtype=bool)
-    for h, sw in enumerate(sched.switches):
-        t = 0.0
-        carried = None if installed is None else installed[h]
-        for j, (perm, a) in enumerate(zip(sw.perms, sw.alphas)):
-            if a < -tol:
-                raise AssertionError("negative duration in schedule")
-            # Independent port-conflict check: perm must be a permutation.
-            if len(np.unique(perm)) != n:
-                raise AssertionError("configuration is not a permutation")
-            if (
-                j == 0
-                and carried is not None
-                and np.array_equal(
-                    np.asarray(perm, dtype=np.int64),
-                    np.asarray(carried, dtype=np.int64),
-                )
-            ):
-                reused[h] = True  # circuit already up: no reconfiguration
-            else:
-                t += sched.delta  # reconfiguration before each configuration
-            served[rows, perm] += a
-            t += a
-        finish = max(finish, t)
+    for w in tl.windows:
+        if len(w.perm) != n:
+            raise AssertionError("configuration is not a permutation")
+        served[rows, w.perm] += w.alpha
+    finish = tl.finish
     shortfall = float((D - served).max())
     if expected_makespan is None:
         expected_makespan = sched.makespan()
         if installed is not None:
-            loads = sched.loads() - sched.delta * reused
+            loads = sched.loads() - sched.delta * tl.reused_switches
             expected_makespan = float(loads.max()) if len(loads) else 0.0
     if abs(finish - expected_makespan) > 1e-6 * max(1.0, finish):
         raise AssertionError(
@@ -102,5 +93,5 @@ def simulate(
         served=served,
         demand_met=shortfall <= tol,
         max_shortfall=max(shortfall, 0.0),
-        reused_switches=reused if installed is not None else None,
+        reused_switches=tl.reused_switches,
     )

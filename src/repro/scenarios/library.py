@@ -122,6 +122,28 @@ _DEFAULT_WIRE_BYTES = {
 }
 
 
+@register_family("uniform")
+def _uniform_family(spec: TrafficSpec, t: int, rng: np.random.Generator):
+    """Uniform all-to-all demand — the traffic rotors are built for.
+
+    Every off-diagonal pair carries ``load`` units (optionally jittered by
+    multiplicative ``noise``); the demand-oblivious round-robin sequence is
+    near-optimal here, which is exactly the regime where scheduled fabrics
+    stop paying for their matching solves.
+    """
+    p = spec.params
+    load = float(_knob(p, "load", t, 1.0))
+    noise = float(_knob(p, "noise", t, 0.0))
+    n = spec.n
+    D = np.full((n, n), load, dtype=np.float64)
+    np.fill_diagonal(D, 0.0)
+    if noise > 0:
+        D *= 1.0 + noise * rng.standard_normal((n, n))
+        np.maximum(D, 0.0, out=D)
+        np.fill_diagonal(D, 0.0)
+    return D, {"load": load, "noise": noise}
+
+
 @register_family("collectives")
 def _collectives_family(spec: TrafficSpec, t: int, rng: np.random.Generator):
     """HLO-collective-derived rack traffic in *bytes*, bursty per period.
@@ -196,6 +218,11 @@ register_scenario(
     TrafficSpec(family="permutations", n=100, s=4, delta=0.01, periods=8,
                 params={"k_schedule": (2, 4, 8, 12, 16, 20, 24, 32)}),
     description="Sum-of-k-permutations degree statistics (Fig. 11 / Appendix)",
+)
+register_scenario(
+    "uniform",
+    TrafficSpec(family="uniform", n=32, s=4, delta=0.01, periods=8),
+    description="Uniform all-to-all traffic — the rotor/VLB home turf",
 )
 register_scenario(
     "collective_ring",

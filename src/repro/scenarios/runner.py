@@ -34,6 +34,7 @@ class PeriodResult:
     meta: dict = field(default_factory=dict)
     demand_met: bool | None = None   # simulator verdict (None unless simulated)
     ref_makespan: float = float("nan")  # quality_ref solver's makespan
+    flowsim: Any = None              # FlowSimReport (None unless flowsim=True)
 
 
 @dataclass
@@ -51,6 +52,7 @@ class ScenarioReport:
     num_shape_buckets: int           # solve_many dispatch groups (1 per shape)
     runtime_s: float                 # wall time of the solve_many call
     quality_ref: str | None = None   # reference solver of the quality ratios
+    flowsim_options: Any = None      # resolved FlowSimOptions (None: no flowsim)
 
     @property
     def deltas_units(self) -> np.ndarray:
@@ -107,10 +109,64 @@ class ScenarioReport:
         finite = r[np.isfinite(r)]
         return float(finite.max()) if len(finite) else float("nan")
 
-    def summary(self) -> dict[str, Any]:
-        """Flat aggregate row (what the smoke lane and benchmarks print)."""
-        mk = self.makespans
+    @property
+    def flowsim_reports(self) -> list:
+        """Per-period FlowSimReports, trace order (empty when flowsim off)."""
+        return [p.flowsim for p in self.periods if p.flowsim is not None]
+
+    @property
+    def fct_all(self) -> np.ndarray:
+        """Every period's flow completion times pooled into one sample."""
+        fs = self.flowsim_reports
+        if not fs:
+            return np.array([])
+        return np.concatenate([f.fct for f in fs])
+
+    def flowsim_summary(self) -> dict[str, Any]:
+        """Trace-level flow stats: pooled FCT distribution, worst-period
+        CCT, conservation verdict over every period, mean utilization and
+        δ-overhead. Raises if the report was built without flowsim."""
+        from ..flowsim import FlowStats
+
+        fs = self.flowsim_reports
+        if not fs:
+            raise ValueError(
+                "no flow-level results: run_scenario(..., flowsim=True)"
+            )
+        stats = FlowStats.from_sample(self.fct_all)
         return {
+            "scenario": self.scenario,
+            "solver": self.solver,
+            "periods": len(fs),
+            "flows": int(sum(f.num_flows for f in fs)),
+            "completed": int(sum(f.completed for f in fs)),
+            "fct_p50": stats.p50,
+            "fct_p90": stats.p90,
+            "fct_p99": stats.p99,
+            "fct_mean": stats.mean,
+            "fct_max": stats.max,
+            "cct_max": float(max(f.cct for f in fs)),
+            "cct_mean": float(np.mean([f.cct for f in fs])),
+            "util_mean": float(
+                np.mean([f.utilization.mean() for f in fs])
+            ),
+            "delta_overhead": float(np.mean([f.delta_overhead for f in fs])),
+            "indirect_frac": float(
+                np.mean([f.indirect_fraction for f in fs])
+            ),
+            "conserved": bool(all(f.conserved for f in fs)),
+            "residual": float(sum(f.residual for f in fs)),
+        }
+
+    def summary(self) -> dict[str, Any]:
+        """Flat aggregate row (what the smoke lane and benchmarks print).
+
+        When the run carried ``flowsim=True`` the row also gets the
+        flow-level headline keys (``fct_p50``/``fct_p99``/``conserved``)
+        from ``flowsim_summary()``.
+        """
+        mk = self.makespans
+        row = {
             "scenario": self.scenario,
             "solver": self.solver,
             "periods": self.trace.T,
@@ -128,6 +184,14 @@ class ScenarioReport:
             "quality_ratio": self.geomean_quality_ratio,
             "quality_ref": self.quality_ref,
         }
+        if self.flowsim_reports:
+            fs = self.flowsim_summary()
+            row.update(
+                fct_p50=fs["fct_p50"],
+                fct_p99=fs["fct_p99"],
+                conserved=fs["conserved"],
+            )
+        return row
 
 
 @dataclass
@@ -240,6 +304,8 @@ def run_scenario(
     solver: str = "spectra",
     options: SolveOptions | None = None,
     simulate: bool = False,
+    flowsim: bool = False,
+    flowsim_options: Any = None,
     processes: int | None = None,
     quality_ref: str | None = None,
     online: bool = False,
@@ -253,6 +319,15 @@ def run_scenario(
     δ-in-units) so the batch stays uniform; per-period CCT seconds are
     ``makespan · unit_s``. ``simulate=True`` additionally replays every
     period through ``repro.fabric.simulator`` and records ``demand_met``.
+
+    ``flowsim=True`` replays every period at the *flow* level
+    (``repro.flowsim.simulate_flows``): each ``PeriodResult.flowsim`` gets
+    a ``FlowSimReport`` (FCT/CCT distributions, utilization, conservation)
+    and the report grows ``flowsim_reports`` / ``fct_all`` /
+    ``flowsim_summary()``. Options resolve from ``flowsim_options`` if
+    given, else from the spec's ``flowsim_params``; solvers that mark
+    ``extras["indirection"]`` (e.g. ``rotor_vlb``) get 2-hop VLB
+    automatically under the default ``indirection="auto"``.
 
     ``quality_ref`` names a second solver (e.g. ``"spectra"`` as the exact
     host reference for a ``solver="spectra_jax"`` run) to solve the same
@@ -298,6 +373,14 @@ def run_scenario(
         )
         ref_makespans = [r.makespan for r in ref_reports]
 
+    fs_opts = None
+    if flowsim:
+        from ..flowsim import FlowSimOptions, simulate_flows
+
+        fs_opts = flowsim_options or FlowSimOptions.from_params(
+            spec.flowsim_params
+        )
+
     periods: list[PeriodResult] = []
     for t, rep in enumerate(reports):
         demand_met = None
@@ -307,6 +390,9 @@ def run_scenario(
             demand_met = bool(
                 sim(rep, units[t], tol=options.tol(rep.backend)).demand_met
             )
+        fs_report = None
+        if flowsim:
+            fs_report = simulate_flows(rep, units[t], options=fs_opts)
         periods.append(
             PeriodResult(
                 period=t,
@@ -318,6 +404,7 @@ def run_scenario(
                 meta=dict(trace.period_meta[t]),
                 demand_met=demand_met,
                 ref_makespan=ref_makespans[t],
+                flowsim=fs_report,
             )
         )
     # Traces are uniform (T, n, n) stacks today, so this is 1 until
@@ -337,6 +424,7 @@ def run_scenario(
         num_shape_buckets=len(shape_buckets(list(units))),
         runtime_s=runtime_s,
         quality_ref=quality_ref,
+        flowsim_options=fs_opts,
     )
     if not online:
         return ScenarioReport(**base)

@@ -55,6 +55,11 @@ class TrafficSpec:
     units: str = "demand"       # "demand" | "bytes"
     link_bandwidth_Bps: float | None = None  # bytes traces; None → OCSFabric default
     params: Mapping[str, Any] = field(default_factory=dict)  # family kwargs
+    # Flow-level replay knobs (repro.flowsim.FlowSimOptions kwargs:
+    # buffer_limit, indirection, line_rate, tol) — the defaults
+    # run_scenario(..., flowsim=True) builds its FlowSimOptions from
+    # unless an explicit flowsim_options argument overrides them.
+    flowsim_params: Mapping[str, Any] = field(default_factory=dict)
 
     def __post_init__(self) -> None:
         if self.n < 2:
@@ -68,6 +73,7 @@ class TrafficSpec:
         if self.units not in _UNITS:
             raise ValueError(f"units must be one of {_UNITS}, got {self.units!r}")
         object.__setattr__(self, "params", dict(self.params))
+        object.__setattr__(self, "flowsim_params", dict(self.flowsim_params))
 
     def replace(self, **overrides: Any) -> "TrafficSpec":
         """New spec with overrides; unknown keys merge into ``params``.

@@ -1,0 +1,351 @@
+"""Flow-level replay: conservation, invariants, rotor baselines, orderings.
+
+Fast lane (the CI ``flowsim-smoke`` job runs exactly this file under
+``-m "not slow"``):
+
+  * every byte of demand is delivered — per flow and in aggregate — for
+    SPECTRA and both rotor baselines on skewed and uniform traffic;
+  * no switch has two serve windows up at one instant, and no flow
+    finishes after the timeline's finish time;
+  * the pure rotor's simulated makespan matches its closed form
+    ``max_h |offsets_h| · cycles · (slot + δ)`` exactly;
+  * with unbounded buffers and no indirection the flow-level finish
+    agrees with the matrix-level simulator's finish to 1e-6;
+  * the headline ordering from the RotorNet/Opus framing: SPECTRA beats
+    rotor+VLB on p99 FCT on skewed AI traffic (gpt/moe), while on uniform
+    all-to-all (n=32) rotor+VLB lands within 1.1× of SPECTRA.
+"""
+
+import numpy as np
+import pytest
+
+from repro.api import Problem, SolveOptions, list_solvers, solve
+from repro.core.baselines import rotor_offsets, rotor_schedule
+from repro.fabric.simulator import simulate
+from repro.flowsim import (
+    FabricBuffers,
+    FlowSimOptions,
+    FlowStats,
+    flows_from_demand,
+    simulate_flows,
+    vlb_injections,
+)
+from repro.scenarios import make_trace, run_scenario
+from repro.traffic.workloads import gpt3b_workload, moe_workload
+
+_NO_LB = SolveOptions(compute_lb=False)
+
+
+def _gpt_tiny() -> np.ndarray:
+    return gpt3b_workload(noise=0.003, rng=np.random.default_rng(0),
+                          tp=4, pp=2, dp=1)
+
+
+def _uniform(n: int) -> np.ndarray:
+    D = np.ones((n, n))
+    np.fill_diagonal(D, 0.0)
+    return D
+
+
+def _replay(D, solver, **extra):
+    rep = solve(
+        Problem(D=D, s=4, delta=0.01), solver=solver,
+        options=SolveOptions(compute_lb=False, extra=extra)
+        if extra else _NO_LB,
+    )
+    return rep, simulate_flows(rep, D)
+
+
+# ---------------------------------------------------------------------------
+# Conservation and structural invariants
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("solver", ["spectra", "rotor", "rotor_vlb"])
+@pytest.mark.parametrize("traffic", ["gpt", "uniform"])
+def test_bytes_conserved_per_flow_and_aggregate(solver, traffic):
+    D = _gpt_tiny() if traffic == "gpt" else _uniform(8)
+    _, fs = _replay(D, solver)
+    assert fs.conserved and fs.port_ok
+    # Per flow: delivered == size within tolerance, FCT stamped finite.
+    np.testing.assert_allclose(fs.delivered, fs.flow_size, atol=1e-9)
+    assert np.isfinite(fs.fct).all()
+    # Aggregate: total delivered == total demand, nothing left in queues.
+    assert fs.delivered_total == pytest.approx(float(D.sum()), abs=1e-9)
+    assert fs.residual <= 1e-9 * fs.num_flows
+
+
+@pytest.mark.parametrize("solver", ["spectra", "rotor", "rotor_vlb"])
+def test_fct_bounded_by_finish(solver):
+    D = _gpt_tiny()
+    _, fs = _replay(D, solver)
+    assert float(fs.fct.max()) <= fs.finish_time + 1e-9
+    assert fs.cct == pytest.approx(float(fs.fct.max()))
+
+
+def test_no_port_serves_two_flows_at_once():
+    # Structural: the timeline never overlaps two windows on one switch,
+    # and within a window sequential service means summed per-pair bytes
+    # can't exceed the window's capacity.
+    D = _gpt_tiny()
+    rep, fs = _replay(D, "spectra")
+    assert fs.port_ok
+    from repro.fabric.timeline import build_timeline
+
+    tl = build_timeline(rep)
+    for h in range(tl.s):
+        ws = sorted((w for w in tl.windows if w.switch == h),
+                    key=lambda w: w.start)
+        for prev, nxt in zip(ws, ws[1:]):
+            assert nxt.start >= prev.end - 1e-12
+
+
+def test_all_zero_demand():
+    D = np.zeros((8, 8))
+    _, fs = _replay(D, "rotor")
+    assert fs.num_flows == 0 and fs.conserved
+    assert fs.finish_time == 0.0 and fs.cct == 0.0
+    assert np.isnan(fs.fct_stats.p99)  # empty sample → NaN stats
+
+
+def test_finite_buffers_throttle_indirection():
+    # buffer_limit=0 forbids parking bytes at intermediates: rotor_vlb's
+    # undersized direct slots then cannot drain skewed demand.
+    D = _gpt_tiny()
+    rep = solve(Problem(D=D, s=4, delta=0.01), solver="rotor_vlb",
+                options=_NO_LB)
+    fs = simulate_flows(rep, D, options=FlowSimOptions(buffer_limit=0.0))
+    assert not fs.conserved and fs.residual > 0
+    assert fs.indirect_fraction == 0.0
+    # Unbounded buffers: same schedule drains completely.
+    assert simulate_flows(rep, D).conserved
+
+
+# ---------------------------------------------------------------------------
+# Agreement with the matrix-level simulator
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("solver", ["spectra", "spectra_pp", "rotor"])
+def test_finish_agrees_with_matrix_simulator(solver):
+    D = _gpt_tiny()
+    rep = solve(Problem(D=D, s=4, delta=0.01), solver=solver, options=_NO_LB)
+    fs = simulate_flows(
+        rep, D, options=FlowSimOptions(indirection="none")
+    )
+    sim = simulate(rep, D)
+    assert fs.finish_time == pytest.approx(sim.finish_time, abs=1e-6)
+
+
+def test_reused_switches_always_array():
+    # Satellite contract: SimReport.reused_switches is a per-switch bool
+    # array even for stateless replay — all-False, never None.
+    D = _gpt_tiny()
+    rep = solve(Problem(D=D, s=4, delta=0.01), solver="spectra",
+                options=_NO_LB)
+    sim = simulate(rep, D)
+    assert isinstance(sim.reused_switches, np.ndarray)
+    assert sim.reused_switches.shape == (4,)
+    assert sim.reused_switches.dtype == bool
+    assert not sim.reused_switches.any()
+
+
+# ---------------------------------------------------------------------------
+# Rotor baselines
+# ---------------------------------------------------------------------------
+
+def test_rotor_makespan_matches_closed_form():
+    n, s, delta = 8, 3, 0.01
+    D = _uniform(n)
+    rep = solve(Problem(D=D, s=s, delta=delta), solver="rotor",
+                options=_NO_LB)
+    slot = rep.extras["rotor"]["slot"]
+    cycles = rep.extras["rotor"]["cycles"]
+    expected = max(
+        len(offs) for offs in rotor_offsets(n, s)
+    ) * cycles * (slot + delta)
+    assert rep.makespan == pytest.approx(expected, abs=1e-9)
+    assert simulate(rep, D).finish_time == pytest.approx(expected, abs=1e-9)
+
+
+def test_rotor_schedule_covers_demand_directly():
+    D = _uniform(8)
+    rep = solve(Problem(D=D, s=4, delta=0.01), solver="rotor")
+    assert rep.validated  # Eq. 3 coverage holds for the pure rotor
+    assert simulate(rep, D).demand_met
+
+
+def test_rotor_vlb_skips_matrix_validation():
+    D = _gpt_tiny()
+    rep = solve(Problem(D=D, s=4, delta=0.01), solver="rotor_vlb")
+    assert not rep.validated  # covers D only under indirection
+    assert rep.extras["indirection"] == "vlb"
+    assert rep.extras["warnings"]
+    # The real validation: flow-level conservation (auto-enables VLB).
+    fs = simulate_flows(rep, D)
+    assert fs.extras["vlb"] and fs.conserved
+    assert fs.indirect_fraction > 0  # skewed traffic actually detours
+
+
+def test_rotor_cycles_knob():
+    D = _uniform(8)
+    r1 = solve(Problem(D=D, s=4, delta=0.01), solver="rotor", options=_NO_LB)
+    r2 = solve(Problem(D=D, s=4, delta=0.01), solver="rotor",
+               options=SolveOptions(compute_lb=False,
+                                    extra={"rotor_cycles": 2}))
+    assert r2.extras["rotor"]["cycles"] == 2
+    # Finer slots, more δ rounds: strictly more reconfigurations.
+    assert r2.num_configs == 2 * r1.num_configs
+    assert simulate_flows(r2, D).conserved
+
+
+# ---------------------------------------------------------------------------
+# The headline orderings (ISSUE acceptance criteria)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("traffic", ["gpt", "moe"])
+def test_spectra_beats_rotor_vlb_on_skewed_p99(traffic):
+    if traffic == "gpt":
+        D = _gpt_tiny()
+    else:
+        D = moe_workload(n=16, top_k=6, tokens_per_gpu=8192, skew=0.25,
+                         rng=np.random.default_rng(0))
+    _, fs_sp = _replay(D, "spectra")
+    _, fs_rv = _replay(D, "rotor_vlb")
+    assert fs_sp.conserved and fs_rv.conserved
+    assert fs_sp.fct_stats.p99 < fs_rv.fct_stats.p99
+
+
+def test_rotor_vlb_competitive_on_uniform():
+    # The rotor's home turf: featureless all-to-all at the registered
+    # evaluation size (n=32 — slot-granularity artifacts at tiny n inflate
+    # the ratio). Demand-oblivious rotor+VLB must land within 1.1× of the
+    # scheduled fabric's p99 FCT.
+    D = _uniform(32)
+    _, fs_sp = _replay(D, "spectra")
+    _, fs_rv = _replay(D, "rotor_vlb")
+    assert fs_sp.conserved and fs_rv.conserved
+    assert fs_rv.fct_stats.p99 <= 1.1 * fs_sp.fct_stats.p99
+
+
+# ---------------------------------------------------------------------------
+# Components: options, stats, buffers, injection planner
+# ---------------------------------------------------------------------------
+
+def test_options_validation():
+    with pytest.raises(ValueError):
+        FlowSimOptions(line_rate=0.0)
+    with pytest.raises(ValueError):
+        FlowSimOptions(buffer_limit=-1.0)
+    with pytest.raises(ValueError):
+        FlowSimOptions(indirection="bogus")
+    opts = FlowSimOptions.from_params({"buffer_limit": 2.0})
+    assert opts.buffer_limit == 2.0 and opts.indirection == "auto"
+
+
+def test_flow_stats_percentiles():
+    stats = FlowStats.from_sample(np.arange(1.0, 101.0))
+    assert stats.p50 == pytest.approx(50.5)
+    assert stats.max == 100.0 and stats.count == 100
+    empty = FlowStats.from_sample(np.array([]))
+    assert np.isnan(empty.p50) and empty.count == 0
+
+
+def test_flows_from_demand_includes_diagonal():
+    D = np.array([[2.0, 1.0], [0.0, 3.0]])
+    flows = flows_from_demand(D, tol=1e-12)
+    pairs = {(f.src, f.dst): f.size for f in flows}
+    assert pairs == {(0, 0): 2.0, (0, 1): 1.0, (1, 1): 3.0}
+
+
+def test_buffers_respect_limit_and_staging():
+    D = np.zeros((3, 3))
+    D[0, 2] = 5.0
+    buf = FabricBuffers(D, buffer_limit=1.0)
+    assert buf.free_space(1) == 1.0
+    buf.stage_arrival(1, 0, 2, 0.75)
+    # Staged bytes count against the limit before the boundary commits.
+    assert buf.free_space(1) == pytest.approx(0.25)
+    assert not buf.relay_queue(1, 2)  # not forwardable until commit
+    buf.commit()
+    assert list(buf.relay_queue(1, 2)) == [0]
+    assert buf.take_relay(1, 2, 0, 10.0) == pytest.approx(0.75)
+    assert buf.free_space(1) == pytest.approx(1.0)
+
+
+def test_vlb_injection_plan_skips_direct_and_self():
+    D = np.zeros((4, 4))
+    D[0, 1], D[0, 2], D[0, 3] = 5.0, 3.0, 1.0
+    buf = FabricBuffers(D, buffer_limit=np.inf)
+    # Window (0 → 2): never detour bytes already destined to 2 (they'd
+    # ride direct) nor to the intermediate itself.
+    plan = vlb_injections(buf, 0, 2, capacity=4.0)
+    dests = [d for d, _ in plan]
+    assert 2 not in dests and 0 not in dests
+    assert dests[0] == 1  # heaviest VOQ first
+    assert sum(x for _, x in plan) <= 4.0 + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# Scenario-layer integration
+# ---------------------------------------------------------------------------
+
+def test_run_scenario_flowsim_every_solver():
+    # Every registered solver flows through the same FlowSimReport.
+    skip = {"spectra_jax"}  # device solver: covered by the slow test below
+    for solver in list_solvers():
+        if solver in skip:
+            continue
+        rep = run_scenario("uniform", solver=solver, flowsim=True,
+                           n=8, periods=2, options=_NO_LB)
+        fs = rep.flowsim_summary()
+        assert fs["conserved"], solver
+        assert np.isfinite(fs["fct_p99"]), solver
+        assert len(rep.flowsim_reports) == 2
+        row = rep.summary()
+        assert row["conserved"] and "fct_p50" in row
+
+
+def test_run_scenario_flowsim_off_by_default():
+    rep = run_scenario("uniform", solver="spectra", n=8, periods=2,
+                       options=_NO_LB)
+    assert rep.flowsim_reports == [] and rep.flowsim_options is None
+    assert "fct_p50" not in rep.summary()
+    with pytest.raises(ValueError):
+        rep.flowsim_summary()
+
+
+def test_spec_flowsim_params_feed_options():
+    trace = make_trace("uniform", n=8, periods=1,
+                       flowsim_params={"indirection": "none"})
+    rep = run_scenario(trace, solver="rotor_vlb", flowsim=True,
+                       options=_NO_LB)
+    assert rep.flowsim_options.indirection == "none"
+    # VLB forced off: the undersized rotor_vlb slots can't drain skew-free
+    # uniform demand... uniform IS drainable directly if slots cover it;
+    # instead assert the option actually reached the engine.
+    assert not rep.flowsim_reports[0].extras["vlb"]
+
+
+@pytest.mark.slow
+def test_scenario_ordering_full_size():
+    # Trace-level acceptance at the registered evaluation sizes: SPECTRA
+    # wins p99 on skewed gpt/moe; rotor_vlb within 1.1× on uniform n=32.
+    for name in ("gpt", "moe"):
+        sp = run_scenario(name, solver="spectra", flowsim=True,
+                          periods=2, options=_NO_LB).flowsim_summary()
+        rv = run_scenario(name, solver="rotor_vlb", flowsim=True,
+                          periods=2, options=_NO_LB).flowsim_summary()
+        assert sp["conserved"] and rv["conserved"]
+        assert sp["fct_p99"] < rv["fct_p99"], name
+    sp = run_scenario("uniform", solver="spectra", flowsim=True,
+                      periods=2, options=_NO_LB).flowsim_summary()
+    rv = run_scenario("uniform", solver="rotor_vlb", flowsim=True,
+                      periods=2, options=_NO_LB).flowsim_summary()
+    assert rv["fct_p99"] <= 1.1 * sp["fct_p99"]
+
+
+@pytest.mark.slow
+def test_run_scenario_flowsim_device_solver():
+    pytest.importorskip("jax")
+    rep = run_scenario("uniform", solver="spectra_jax", flowsim=True,
+                       n=8, periods=2, options=_NO_LB)
+    assert rep.flowsim_summary()["conserved"]
