@@ -1,0 +1,162 @@
+"""Matcher microbenchmark: ms/dispatch + quality per n × matcher.
+
+Workload is the DECOMPOSE inner-loop regime — sum-of-16-permutations demand
+with the node-coverage M-bonus folded into the weights — so the timings are
+what ``decompose_jax`` actually pays per matching round, not a synthetic
+dense-uniform instance. Quality is reported as the optimality ratio
+``scipy_optimal / matched_weight`` (1.0 = exact).
+
+Usage::
+
+    python -m benchmarks.bench_matching [--fast] [--check] [--reps N]
+
+Writes ``benchmarks/out/BENCH_matching.json``. ``--fast`` caps n at 256
+(the CI configuration); ``--check`` exits 1 when any matcher's quality
+ratio exceeds 1.10 or ``auction_fused`` fails to beat ``auction`` by ≥1.5×
+per dispatch at n ≥ 256 — the kernel-parity CI gate.
+
+``auction_fr`` (forward-reverse) is dropped above n=256: its dual-side
+rounds cost ~5× the forward auction and it is never the autotuned pick in
+that regime (see ``core.jaxopt.matching.AUTOTUNE_FUSED_N_THRESHOLD``).
+Likewise ``auction`` is dropped at n=1024 unless ``--check`` needs it —
+66.9 s/dispatch buys no information the n ∈ {256, 512} points don't.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+
+from .common import OUT_DIR
+
+SIZES = (100, 256, 512, 1024)
+FAST_SIZES = (100, 256)
+QUALITY_GATE = 1.10
+SPEEDUP_GATE = 1.5
+
+
+def bench_weights(n: int, k: int = 16, seed: int = 0) -> np.ndarray:
+    """Sum-of-k-permutations demand + DECOMPOSE M-bonus weights."""
+    rng = np.random.default_rng(seed)
+    D = np.zeros((n, n))
+    for _ in range(k):
+        D[np.arange(n), rng.permutation(n)] += rng.random() + 0.05
+    S = D > 0
+    rd, cd = S.sum(1), S.sum(0)
+    kk = max(rd.max(), cd.max())
+    M = np.maximum(D, 0).max(axis=1).sum() + 1.0
+    bonus = M * ((rd == kk)[:, None].astype(float) + (cd == kk)[None, :])
+    return (np.maximum(D, 0) + np.where(S, bonus, 0)).astype(np.float32)
+
+
+def _matchers_for(n: int) -> list[str]:
+    if n <= 256:
+        return ["auction", "auction_fr", "auction_fused"]
+    if n <= 512:
+        return ["auction", "auction_fused"]
+    return ["auction", "auction_fused"]
+
+
+def run(sizes, reps: int) -> list[dict]:
+    import jax
+    import jax.numpy as jnp
+    from scipy.optimize import linear_sum_assignment
+
+    from repro.core.jaxopt.matching import get_matcher
+
+    rows = []
+    for n in sizes:
+        W = bench_weights(n)
+        ri, ci = linear_sum_assignment(W, maximize=True)
+        opt = float(W[ri, ci].sum())
+        r = max(1, reps if n <= 256 else 1)
+        for name in _matchers_for(n):
+            fn = get_matcher(name)
+            Wd = jnp.asarray(W)
+            t0 = time.perf_counter()
+            perm, conv = fn(Wd)
+            jax.block_until_ready(perm)
+            compile_s = time.perf_counter() - t0
+            times = []
+            for _ in range(r):
+                t0 = time.perf_counter()
+                perm, conv = fn(Wd)
+                jax.block_until_ready(perm)
+                times.append(time.perf_counter() - t0)
+            got = float(W[np.arange(n), np.asarray(perm)].sum())
+            row = {
+                "n": n,
+                "matcher": name,
+                "ms_per_dispatch": 1e3 * float(np.mean(times)),
+                "compile_s": compile_s,
+                "quality_ratio": opt / got,
+                "converged": bool(conv),
+                "reps": r,
+            }
+            rows.append(row)
+            print(
+                f"n={n:5d} {name:14s} {row['ms_per_dispatch']:10.1f} ms"
+                f"  quality={row['quality_ratio']:.6f}"
+                f"  converged={row['converged']}",
+                flush=True,
+            )
+    return rows
+
+
+def check(rows: list[dict]) -> list[str]:
+    """CI gates: quality ≤ 1.10 everywhere; fused ≥1.5× vs auction at n ≥ 256."""
+    failures = []
+    by = {(r["n"], r["matcher"]): r for r in rows}
+    for r in rows:
+        if r["quality_ratio"] > QUALITY_GATE:
+            failures.append(
+                f"n={r['n']} {r['matcher']}: quality ratio "
+                f"{r['quality_ratio']:.4f} > {QUALITY_GATE}"
+            )
+        if not r["converged"]:
+            failures.append(f"n={r['n']} {r['matcher']}: did not converge")
+    for n in sorted({r["n"] for r in rows}):
+        if n < 256:
+            continue
+        base, fused = by.get((n, "auction")), by.get((n, "auction_fused"))
+        if base is None or fused is None:
+            continue
+        speedup = base["ms_per_dispatch"] / fused["ms_per_dispatch"]
+        if speedup < SPEEDUP_GATE:
+            failures.append(
+                f"n={n}: auction_fused only {speedup:.2f}x faster than "
+                f"auction (< {SPEEDUP_GATE}x)"
+            )
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fast", action="store_true", help="cap n at 256 (CI)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 on quality/speedup gate failures")
+    ap.add_argument("--reps", type=int, default=3,
+                    help="timed reps per point at n <= 256 (default 3)")
+    args = ap.parse_args(argv)
+
+    sizes = FAST_SIZES if args.fast else SIZES
+    rows = run(sizes, args.reps)
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    out = OUT_DIR / "BENCH_matching.json"
+    out.write_text(json.dumps({"workload": "perm16+M-bonus", "rows": rows},
+                              indent=2))
+    print(f"wrote {out}")
+    if args.check:
+        failures = check(rows)
+        for f in failures:
+            print(f"GATE FAIL: {f}", file=sys.stderr)
+        return 1 if failures else 0
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -7,6 +7,18 @@ dispatch), amortized per instance, and a device-vs-host quality column
 (geomean of per-instance makespan ratios on the same matrices). The n-aware
 matcher ε-schedule keeps per-dispatch cost bounded at n ≥ 64, so the device
 column now runs at every workload size even under FAST.
+
+Large-n tier: ``benchmark_large`` (n=256) and ``permutations_large``
+(n=512) exercise the ``auction_fused`` autotune bucket with reduced
+reps/batch; FAST keeps n ≤ 256 (the n=512 row is skipped).
+
+AUTOTUNE thresholds re-measured 2026-08 on the ``bench_matching`` workload
+(sum-of-16-permutations + DECOMPOSE M-bonus, CPU host, jnp matcher paths):
+per-dispatch ``auction_fused`` vs ``auction`` = 0.37 s vs 0.72 s at n=256
+(1.9×), 2.8 s vs 10.8 s at n=512 (3.8×), 22.9 s vs 66.9 s at n=1024
+(2.9×), all at optimality ratio 1.0000 — confirming
+``AUTOTUNE_FUSED_N_THRESHOLD = 128`` (``auction`` still wins ≤ 32;
+``auction_fr`` stays the robust mid-range pick; fused owns n > 128).
 """
 
 from __future__ import annotations
@@ -54,21 +66,32 @@ def run():
 
     reps = 3 if FAST else 10
     batch = 4 if FAST else 16
+    # Large-n rows amortize one expensive dispatch instead of many cheap
+    # ones: the point is the per-instance cost of the fused-matcher bucket,
+    # not tight percentiles.
+    large_reps = 2
+    large_batch = 2
     opts = SolveOptions(validate=False, compute_lb=False)
+    workloads = [
+        ("gpt_s4", "gpt", 4, False),
+        ("moe_s4", "moe", 4, False),
+        ("benchmark_s4", "benchmark", 4, False),
+        ("benchmark_large_s4", "benchmark_large", 4, True),
+    ]
+    if not FAST:  # FAST keeps n ≤ 256
+        workloads.append(("permutations_large_s4", "permutations_large", 4, True))
     rows, out = [], []
-    for wname, scenario, s in (
-        ("gpt_s4", "gpt", 4),
-        ("moe_s4", "moe", 4),
-        ("benchmark_s4", "benchmark", 4),
-    ):
+    for wname, scenario, s, large in workloads:
+        w_reps = large_reps if large else reps
+        w_batch = large_batch if large else batch
         times = []
-        for D in scenario_matrices(scenario, reps):
+        for D in scenario_matrices(scenario, w_reps):
             t0 = time.perf_counter()
             solve(Problem(D, s, 0.01), solver="spectra", options=opts)
             times.append(time.perf_counter() - t0)
         mean_ms = 1e3 * float(np.mean(times))
         p95_ms = 1e3 * float(np.percentile(times, 95))
-        dev_ms, quality = _batched_device(scenario, s, 0.01, batch)
+        dev_ms, quality = _batched_device(scenario, s, 0.01, w_batch)
         rows.append(
             {
                 "workload": wname,
@@ -80,13 +103,13 @@ def run():
                 "device_quality_vs_host": (
                     float("nan") if quality is None else quality
                 ),
-                "batch_size": batch,
+                "batch_size": w_batch,
             }
         )
         derived = f"p95_ms={p95_ms:.1f}"
         if dev_ms is not None:
             derived += (
-                f" batched_device_ms/inst={dev_ms:.2f} (B={batch})"
+                f" batched_device_ms/inst={dev_ms:.2f} (B={w_batch})"
                 f" quality_vs_host={quality:.3f}"
             )
         out.append(

@@ -9,13 +9,16 @@ host schedules: the Python-object ``ParallelSchedule`` is only materialized
 when something touches it (validation, simulation, inspection), so the hot
 path never loops over instances on the host.
 
-``SolveOptions.extra`` knobs: ``use_kernel`` (Pallas top-2 reduction),
+``SolveOptions.extra`` knobs: ``use_kernel`` (Pallas kernels; unset →
+backend detection via ``kernels.backend.resolve_use_kernel``: on by default
+on TPU, off elsewhere unless ``REPRO_USE_KERNEL`` forces interpret mode),
 ``equalize`` (default True), ``merge_aware`` (SPECTRA++ merge-aware device
 EQUALIZE), ``extra_slots`` (EQUALIZE split headroom, default 64),
 ``matcher`` (device MWM solver name from ``core.jaxopt.matching.MATCHERS``;
 unset → autotuned per shape bucket by ``matching.default_matcher``:
-``auction`` at n ≤ 32, ``auction_fr`` above), ``repair_rounds`` (post-REFINE
-device local-search sweeps, default 0 = paper-faithful Alg. 1+2).
+``auction`` at n ≤ 32, ``auction_fr`` to 128, ``auction_fused`` above),
+``repair_rounds`` (post-REFINE device local-search sweeps, default 0 =
+paper-faithful Alg. 1+2).
 """
 
 from __future__ import annotations
@@ -30,6 +33,7 @@ from ..core.decompose import Decomposition
 from ..core.equalize import equalize
 from ..core.jaxopt.e2e import E2EResult, spectra_jax_e2e, spectra_jax_e2e_many
 from ..core.schedule_ir import DeviceSchedule, LazySchedule, ir_to_schedule
+from ..kernels.backend import resolve_use_kernel
 from .problem import Problem, SolveOptions, SolveReport, finish_report
 
 
@@ -37,7 +41,7 @@ def _e2e_kwargs(options: SolveOptions, n: int) -> dict:
     from ..core.jaxopt.matching import default_matcher
 
     return dict(
-        use_kernel=bool(options.extra.get("use_kernel", False)),
+        use_kernel=resolve_use_kernel(options.extra.get("use_kernel")),
         do_equalize=bool(options.extra.get("equalize", True)),
         merge_aware=bool(options.extra.get("merge_aware", False)),
         extra_slots=int(options.extra.get("extra_slots", 64)),
@@ -91,12 +95,14 @@ class _HostBatch:
         merge_aware: bool = False,
         matcher: str = "auction",
         repair_rounds: int = 0,
+        use_kernel: bool = False,
         **_ignored,
     ):
         sched = res.schedule
         self.merge_aware = merge_aware
         self.matcher = matcher
         self.repair_rounds = repair_rounds
+        self.use_kernel = use_kernel
         self.perms = np.asarray(sched.perms)
         self.alphas = np.asarray(sched.alphas, dtype=np.float64)
         self.switch = np.asarray(sched.switch)
@@ -180,6 +186,7 @@ class _HostBatch:
             "k": int(self.k[b]),
             "converged": converged,
             "matcher": self.matcher,
+            "use_kernel": self.use_kernel,
             "repair_rounds": self.repair_rounds,
             "device_makespan": device_makespan,
             "device_lpt_makespan": float(self.lpt_makespans[b]),

@@ -37,7 +37,7 @@ def _decompose_jax_stage(
     *,
     matcher: str = "auction",
     repair_rounds: int = 0,
-    use_kernel: bool = False,
+    use_kernel: bool | None = None,
     **kw,
 ):
     # Imported lazily so the numpy stage tables never pay for (or require)
@@ -46,12 +46,13 @@ def _decompose_jax_stage(
     import numpy as np
 
     from ..core.jaxopt.decompose_jax import decompose_jax, to_decomposition
+    from ..kernels.backend import resolve_use_kernel
 
     dec = decompose_jax(
         jnp.asarray(np.asarray(problem.D), jnp.float32),
         matcher=matcher,
         repair_rounds=repair_rounds,
-        use_kernel=use_kernel,
+        use_kernel=resolve_use_kernel(use_kernel),
         **kw,
     )
     return to_decomposition(dec)

@@ -13,9 +13,18 @@ jittable, ``vmap``-able matchers sharing one bidding engine:
                  bidding breaks the one-sided price wars that sparse
                  large-n instances can trigger, at ~2 top-2 reductions per
                  round.
+    auction_fused  the whole hot loop owned by one fused implementation
+                 (``kernels/auction_fused``): with ``use_kernel`` a single
+                 Pallas kernel runs bid → price-update → assignment-flip
+                 across ε-phase grid steps with prices in VMEM scratch and
+                 lane-aligned 128-column tiles (no XLA round-trip between
+                 rounds); without it, an exactly-matching jnp reference
+                 whose O(n) segment-scatter rounds are the fast large-n
+                 host path. The default matcher at n > 128.
 
-Both share the Pallas ``kernels/auction_bid`` top-2 reduction via
-``use_kernel`` (the reverse rounds call it on ``W.T``).
+``auction``/``auction_fr`` share the Pallas ``kernels/auction_bid`` top-2
+reduction via ``use_kernel`` (the reverse rounds call it on ``W.T``);
+``auction_fused`` swaps the whole loop for ``kernels/auction_fused``.
 
 The ε-schedule is n- and spread-aware. Two failure modes of a fixed
 schedule, both observed at the paper's n=100 benchmark workload:
@@ -59,25 +68,46 @@ _EPS_FLOOR = 2.0**-22
 
 
 def default_num_phases(n: int) -> int:
-    """n-aware ε-schedule length: bounded per-phase ε shrink factor."""
-    return 8 if n <= 32 else 12
+    """n-aware ε-schedule length: bounded per-phase ε shrink factor.
+
+    The ulp-floored final ε sits ~21 bits below ``wmax/2``; 8 phases keep
+    the per-phase shrink ≤ ~8× at small n, 12 up to the paper's n=100
+    benchmark, 16 in the pod-scale n ∈ {512, 1024} regime (at n > 256 the
+    1e-6/n target is already below the float32 ulp floor, so extra phases
+    buy smaller jumps, not smaller ε — measured necessary for the
+    property-test optimality rate at n=512).
+    """
+    if n <= 32:
+        return 8
+    if n <= 256:
+        return 12
+    return 16
 
 
 # Shape-bucket autotuning: the matcher ``repro.api`` picks per shape bucket
-# when the caller didn't name one. ``auction`` wins below the threshold
-# (fastest on the paper workloads); above it the combined forward-reverse
-# auction's dual-side bidding is the robust default against the one-sided
-# price wars sparse large-n instances can trigger (measured at moe n=64 and
-# benchmark n=100: identical 1.0000 quality, converged). Override per call
-# via ``SolveOptions.extra["matcher"]`` or globally via
+# when the caller didn't name one. ``auction`` wins below the first
+# threshold (fastest on the paper workloads); between the thresholds the
+# combined forward-reverse auction's dual-side bidding is the robust
+# default against the one-sided price wars sparse large-n instances can
+# trigger (measured at moe n=64 and benchmark n=100: identical 1.0000
+# quality, converged); above the second, the fused auction owns the loop —
+# re-measured on the BENCH_matching workload (sum-of-16-permutations + the
+# DECOMPOSE M-bonus, CPU host, jnp paths): per-dispatch auction_fused vs
+# auction 0.37s vs 0.72s at n=256 (1.9×), 2.8s vs 10.8s at n=512 (3.8×),
+# 22.9s vs 66.9s at n=1024 (2.9×), all at quality ratio 1.0000 (fused is
+# also fastest at n=100: 20ms vs 34ms, but auction_fr's dual-side bidding
+# stays the mid-range default for robustness on sparse instances).
+# Override per call via ``SolveOptions.extra["matcher"]`` or globally via
 # ``set_default_matcher_policy``.
 AUTOTUNE_N_THRESHOLD = 32
+AUTOTUNE_FUSED_N_THRESHOLD = 128
 
 _DEFAULT_POLICY = None  # None → built-in threshold rule
 
 
 def default_matcher(n: int) -> str:
-    """Registry default for an (n, n) instance (see AUTOTUNE_N_THRESHOLD)."""
+    """Registry default for an (n, n) instance (see AUTOTUNE_N_THRESHOLD /
+    AUTOTUNE_FUSED_N_THRESHOLD)."""
     if _DEFAULT_POLICY is not None:
         name = _DEFAULT_POLICY(n)
         if name not in MATCHERS:
@@ -89,7 +119,11 @@ def default_matcher(n: int) -> str:
                 f"for n={n}; available: {list_matchers()}"
             )
         return name
-    return "auction" if n <= AUTOTUNE_N_THRESHOLD else "auction_fr"
+    if n <= AUTOTUNE_N_THRESHOLD:
+        return "auction"
+    if n <= AUTOTUNE_FUSED_N_THRESHOLD:
+        return "auction_fr"
+    return "auction_fused"
 
 
 def set_default_matcher_policy(policy) -> None:
@@ -330,6 +364,112 @@ def match_auction_fr(
     return perm, converged
 
 
+def _polish_2swap(W, perm, max_swaps: int):
+    """Greedy best-pair 2-swap polish: upgrades the auction's guarantee
+    from n·eps_final-optimal to *also 2-opt* (no single transposition can
+    improve the assignment).
+
+    eps_final is ulp-floored (``_EPS_FLOOR``), and at pod scale the floor's
+    slack reaches ~n·wmax·2⁻²² ≈ 0.3 weight units (n=1024, M-bonus
+    regime) — enough room, in principle, for transposition-type errors the
+    polish repairs for free (one iteration ≈ one bidding round's top-2
+    pass; ``gain(i,i') = W[i,σ(i')] + W[i',σ(i)] − W[i,σ(i)] −
+    W[i',σ(i')]``, best strictly-positive swap applied per iteration).
+    Measured on the BENCH_matching workloads the auction already lands
+    2-opt (the polish is a no-op pass) — this is a cheap worst-case bound,
+    not the source of the large-n quality numbers. Coverage is safe: the
+    M-bonus dominates any demand gain, so a weight-increasing swap never
+    drops a covered critical line.
+    """
+    n = W.shape[0]
+    rows = jnp.arange(n)
+
+    def cond(carry):
+        _, it, improved = carry
+        return improved & (it < max_swaps)
+
+    def body(carry):
+        perm, it, _ = carry
+        cur = W[rows, perm]
+        cross = W[:, perm]  # cross[i, i'] = W[i, perm[i']]
+        gain = cross + cross.T - cur[:, None] - cur[None, :]
+        flat = jnp.argmax(gain)
+        i, ip = flat // n, flat % n
+        do = gain[i, ip] > 0
+        pi, pip = perm[i], perm[ip]
+        new_perm = perm.at[i].set(jnp.where(do, pip, pi)).at[ip].set(
+            jnp.where(do, pi, pip)
+        )
+        return new_perm, it + 1, do
+
+    perm, _, _ = jax.lax.while_loop(
+        cond, body, (perm, jnp.int32(0), jnp.bool_(True))
+    )
+    return perm
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "num_phases", "max_iters", "use_kernel", "with_prices", "interpret"
+    ),
+)
+def match_auction_fused(
+    W: jax.Array,
+    *,
+    num_phases: int | None = None,
+    max_iters: int | None = None,
+    use_kernel: bool = False,
+    prices0: jax.Array | None = None,
+    with_prices: bool = False,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, ...]:
+    """Fully fused forward ε-scaling auction. Returns ``(perm, converged)``.
+
+    The whole hot loop lives in ``kernels/auction_fused``: with
+    ``use_kernel=True`` a single Pallas kernel runs every bidding round of
+    every ε phase on-chip (prices in VMEM scratch across the phase grid,
+    lane-aligned 128-column tiles at n ≥ 256 — the pod-scale path); with
+    ``use_kernel=False`` the exactly-matching jnp reference, whose
+    segment-scatter rounds are themselves several times cheaper than
+    ``match_auction``'s whole-matrix rounds at large n. Shares this
+    module's ε-schedule (ulp floor included), ``(perm, converged)``
+    contract, greedy completion, and ``prices0``/``with_prices`` warm-start
+    surface, then runs the ``_polish_2swap`` sweep so the result is also
+    2-opt — a cheap worst-case guard against ε-floor transposition errors
+    (measured a no-op on the benchmark workloads; see its docstring).
+    ``interpret`` forces/disables Pallas interpret mode (``None`` → auto:
+    interpret off-TPU).
+    """
+    from ...kernels.auction_fused.ops import fused_auction
+
+    W = W.astype(jnp.float32)
+    n = W.shape[0]
+    if num_phases is None:
+        num_phases = default_num_phases(n)
+    if max_iters is None:
+        max_iters = default_max_iters(n)
+    init_prices = (
+        jnp.zeros((n,), jnp.float32)
+        if prices0 is None
+        else jnp.asarray(prices0, jnp.float32)
+    )
+    row2col, col2row, prices = fused_auction(
+        W,
+        init_prices,
+        _eps_schedule(W, num_phases),
+        max_iters=max_iters,
+        use_kernel=use_kernel,
+        interpret=interpret,
+    )
+    converged = (row2col >= 0).all()
+    perm = _complete_greedy(row2col, col2row)
+    perm = _polish_2swap(W, perm, max_swaps=2 * n)
+    if with_prices:
+        return perm, converged, prices
+    return perm, converged
+
+
 # --------------------------------------------------------------- registry
 
 MatcherFn = Callable[..., tuple[jax.Array, jax.Array]]
@@ -337,6 +477,7 @@ MatcherFn = Callable[..., tuple[jax.Array, jax.Array]]
 MATCHERS: dict[str, MatcherFn] = {
     "auction": match_auction,
     "auction_fr": match_auction_fr,
+    "auction_fused": match_auction_fused,
 }
 
 

@@ -7,23 +7,15 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from ..backend import on_tpu
 from .kernel import NEG, masked_row_top2_pallas
-
-_ON_TPU = None
-
-
-def _on_tpu() -> bool:
-    global _ON_TPU
-    if _ON_TPU is None:
-        _ON_TPU = jax.default_backend() == "tpu"
-    return _ON_TPU
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def masked_row_top2(W: jax.Array, prices: jax.Array, *, interpret: bool | None = None):
     """Per-row (v1, v2, j1) of V = W − p. Pads rows to 8, cols to 128."""
     if interpret is None:
-        interpret = not _on_tpu()
+        interpret = not on_tpu()
     n, m = W.shape
     rpad = (-n) % 8
     cpad = (-m) % 128

@@ -1,0 +1,11 @@
+"""Fused ε-scaling auction: the whole matcher hot loop in one Pallas kernel.
+
+``kernel.py`` owns bid → price-update → assignment-flip across ε-phase grid
+steps with prices in VMEM scratch; ``ref.py`` is the exactly-matching jnp
+oracle (and the fast host-backend path); ``ops.py`` pads/dispatches.
+"""
+
+from .ops import fused_auction
+from .ref import fused_auction_ref
+
+__all__ = ["fused_auction", "fused_auction_ref"]

@@ -1,0 +1,187 @@
+"""Pallas TPU kernel: the entire ε-scaling auction fused into one call.
+
+The legacy matcher path (``core.jaxopt.matching.match_auction``) runs the
+bidding loop as a ``lax.while_loop`` *around* a Pallas top-2 reduction, so
+every round round-trips through XLA and re-materializes whole-matrix
+intermediates. This kernel owns the loop instead:
+
+* **grid = (num_phases,)** — the ε-scaling phase axis. Column dual prices
+  live in VMEM scratch and persist across grid steps (seeded from the
+  warm-start input on phase 0); each phase restarts the assignment maps and
+  bids until complete, exactly the ε-scaling restart semantics of the
+  registry matchers.
+* **in-kernel bidding rounds** — bid → price-update → assignment-flip runs
+  inside a ``lax.while_loop`` *within* the kernel, so rounds never leave
+  VMEM and never re-dispatch.
+* **blocked/tiled** — both the per-row top-2 bid reduction and the
+  per-column winner selection iterate over lane-aligned ``block_cols``-wide
+  tiles (the row dimension is processed whole; padding keeps it sublane-
+  aligned), bounding peak VMEM temporaries at (n_pad × block_cols) so the
+  n ∈ {256, 512, 1024} regime fits comfortably beside the resident benefit
+  matrix (4 MB at n=1024 f32).
+
+Round semantics (shared bit-for-bit with ``ref.fused_auction_ref`` — the
+interpret-mode parity tests assert exact equality):
+
+1. every unassigned row computes its top-2 values ``(v1, v2)`` of
+   ``W − prices`` and bids ``inc = v1 − v2 + ε`` on its favorite column
+   (ties → lowest column index, merged first-tile-wins across tiles);
+2. each column takes the highest bid (ties → lowest row index), kicks its
+   previous owner, and raises its price by the winning increment — the
+   increment formulation avoids gathers: every bidder on column j shares
+   ``prices[j]``, so comparing increments IS comparing absolute bids;
+3. row→column assignments are rebuilt from the column→row map (a row bids
+   only while unassigned, so the map stays injective).
+
+Padding contract (see ``ops.fused_auction``): padded columns carry ``NEG``
+weight so no real row ever bids on them; padded rows arrive pre-assigned to
+padded columns so the termination test ``(row2col < 0).any()`` only watches
+real rows.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+NEG_HALF = NEG / 2
+
+
+def _fused_auction_kernel(
+    eps_ref,      # (1,) f32 — this phase's ε
+    W_ref,        # (n_pad, n_pad) f32 — benefit matrix (NEG-padded)
+    p0_ref,       # (n_pad,) f32 — warm-start column prices
+    init_ref,     # (n_pad,) i32 — phase-start assignment (-1 real, identity pad)
+    r2c_ref,      # out (n_pad,) i32
+    c2r_ref,      # out (n_pad,) i32
+    price_ref,    # out (n_pad,) f32
+    price_scr,    # VMEM (n_pad,) f32 — prices carried across ε phases
+    *,
+    n_pad: int,
+    block_cols: int,
+    max_iters: int,
+):
+    pid = pl.program_id(0)
+
+    @pl.when(pid == 0)
+    def _seed_prices():
+        price_scr[...] = p0_ref[...]
+
+    eps = eps_ref[0]
+    nt = n_pad // block_cols
+    rows2d = jax.lax.broadcasted_iota(jnp.int32, (n_pad, block_cols), 0)
+    cols2d = jax.lax.broadcasted_iota(jnp.int32, (n_pad, block_cols), 1)
+
+    def cond(carry):
+        r2c, _, _, it = carry
+        return (r2c < 0).any() & (it < max_iters)
+
+    def body(carry):
+        r2c, c2r, prices, it = carry
+
+        # ---- bid: per-row top-2 of W − prices, blocked over column tiles.
+        v1 = jnp.full((n_pad,), NEG, jnp.float32)
+        v2 = jnp.full((n_pad,), NEG, jnp.float32)
+        j1 = jnp.zeros((n_pad,), jnp.int32)
+        for ct in range(nt):
+            lo = ct * block_cols
+            tile = W_ref[:, lo:lo + block_cols] - prices[lo:lo + block_cols][None, :]
+            t1 = tile.max(axis=1)
+            jloc = jnp.argmax(tile, axis=1).astype(jnp.int32)
+            t2 = jnp.where(cols2d == jloc[:, None], NEG, tile).max(axis=1)
+            take = t1 > v1  # strict: earlier tile wins ties = global argmax
+            v2 = jnp.where(take, jnp.maximum(t2, v1), jnp.maximum(v2, t1))
+            v1 = jnp.where(take, t1, v1)
+            j1 = jnp.where(take, jloc + lo, j1)
+        inc = jnp.where(r2c < 0, v1 - v2 + eps, NEG)
+
+        # ---- price-update + assignment-flip, blocked over column tiles.
+        new_prices = prices
+        new_c2r = c2r
+        r2c_acc = jnp.full((n_pad,), n_pad, jnp.int32)
+        for ct in range(nt):
+            lo = ct * block_cols
+            cols_g = cols2d + lo
+            contrib = jnp.where(j1[:, None] == cols_g, inc[:, None], NEG)
+            best = contrib.max(axis=0)                       # (bc,)
+            cand = (contrib >= best[None, :]) & (contrib > NEG_HALF)
+            winner = jnp.where(cand, rows2d, n_pad).min(axis=0)
+            has = winner < n_pad
+            c2r_t = jnp.where(has, winner, new_c2r[lo:lo + block_cols])
+            p_t = jnp.where(
+                has,
+                new_prices[lo:lo + block_cols] + best,
+                new_prices[lo:lo + block_cols],
+            )
+            new_c2r = jax.lax.dynamic_update_slice(new_c2r, c2r_t, (lo,))
+            new_prices = jax.lax.dynamic_update_slice(new_prices, p_t, (lo,))
+            # Row i owns global column lo+j iff c2r_t[j] == i (injective map).
+            owned = c2r_t[None, :] == rows2d
+            r2c_acc = jnp.minimum(
+                r2c_acc, jnp.where(owned, cols_g, n_pad).min(axis=1)
+            )
+        new_r2c = jnp.where(r2c_acc < n_pad, r2c_acc, -1)
+        return new_r2c, new_c2r, new_prices, it + 1
+
+    init = init_ref[...]
+    r2c, c2r, prices, _ = jax.lax.while_loop(
+        cond, body, (init, init, price_scr[...], jnp.int32(0))
+    )
+    price_scr[...] = prices
+    r2c_ref[...] = r2c
+    c2r_ref[...] = c2r
+    price_ref[...] = prices
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_cols", "max_iters", "interpret")
+)
+def fused_auction_pallas(
+    W: jax.Array,             # (n_pad, n_pad), NEG-padded, n_pad % 128 == 0
+    prices0: jax.Array,       # (n_pad,)
+    init_assign: jax.Array,   # (n_pad,) i32
+    eps_schedule: jax.Array,  # (num_phases,)
+    *,
+    block_cols: int,
+    max_iters: int,
+    interpret: bool = False,
+):
+    n_pad = W.shape[0]
+    if n_pad % block_cols:
+        raise ValueError(
+            f"padded size {n_pad} not divisible by block_cols {block_cols}"
+        )
+    num_phases = eps_schedule.shape[0]
+    kernel = functools.partial(
+        _fused_auction_kernel,
+        n_pad=n_pad,
+        block_cols=block_cols,
+        max_iters=max_iters,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(num_phases,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda p: (p,)),
+            pl.BlockSpec((n_pad, n_pad), lambda p: (0, 0)),
+            pl.BlockSpec((n_pad,), lambda p: (0,)),
+            pl.BlockSpec((n_pad,), lambda p: (0,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((n_pad,), lambda p: (0,)),
+            pl.BlockSpec((n_pad,), lambda p: (0,)),
+            pl.BlockSpec((n_pad,), lambda p: (0,)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((n_pad,), jnp.int32),
+            jax.ShapeDtypeStruct((n_pad,), jnp.int32),
+            jax.ShapeDtypeStruct((n_pad,), W.dtype),
+        ),
+        scratch_shapes=[pltpu.VMEM((n_pad,), W.dtype)],
+        interpret=interpret,
+    )(eps_schedule, W, prices0, init_assign)

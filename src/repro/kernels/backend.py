@@ -1,0 +1,52 @@
+"""Kernel backend detection: when does the Pallas path turn on?
+
+``use_kernel`` is threaded through every device entry point (matchers,
+``decompose_jax``, the fused e2e call, ``SolveOptions.extra``), but it used
+to default to ``False`` everywhere — nothing ever turned the Pallas path on
+outside hand-written tests. API boundaries now pass ``None`` through
+``resolve_use_kernel``, which supplies the backend-aware default:
+
+* on TPU → ``True``: the compiled Pallas kernels are the production path;
+* elsewhere → ``False`` (the pure-jnp reference math), unless the
+  ``REPRO_USE_KERNEL`` environment variable is set truthy, which forces the
+  kernels on — they then run in Pallas *interpret* mode (each kernel's
+  ``ops`` wrapper resolves ``interpret=None`` to ``not on_tpu()``). That is
+  the CPU CI parity lane: the same kernel code path, executed by the
+  interpreter instead of Mosaic.
+
+An explicit ``use_kernel=True/False`` (per call or via
+``SolveOptions.extra["use_kernel"]``) always wins over detection.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+__all__ = ["on_tpu", "default_use_kernel", "resolve_use_kernel"]
+
+
+@functools.lru_cache(maxsize=None)
+def on_tpu() -> bool:
+    """True when the default JAX backend is a TPU (cached per process)."""
+    import jax
+
+    return jax.default_backend() == "tpu"
+
+
+def default_use_kernel() -> bool:
+    """Backend-aware default for ``use_kernel``.
+
+    ``REPRO_USE_KERNEL`` overrides detection both ways (``1``/``true`` →
+    kernels on, ``0``/``false`` → off); it is re-read on every call so test
+    harnesses can flip it per test.
+    """
+    env = os.environ.get("REPRO_USE_KERNEL")
+    if env is not None:
+        return env.strip().lower() not in ("", "0", "false", "no")
+    return on_tpu()
+
+
+def resolve_use_kernel(value: bool | None = None) -> bool:
+    """``None`` → backend detection; anything else → ``bool(value)``."""
+    return default_use_kernel() if value is None else bool(value)

@@ -147,6 +147,7 @@ def solve_spectra_online_jax(
         online_step_jax,
     )
     from ..core.schedule_ir import LazySchedule
+    from ..kernels.backend import resolve_use_kernel
     from .state import online_ir_to_schedule
 
     state = options.extra.get("online")
@@ -172,7 +173,7 @@ def solve_spectra_online_jax(
         np.asarray(problem.D, dtype=np.float64).astype(np.float32),
         problem.s,
         np.float32(problem.delta),
-        use_kernel=bool(options.extra.get("use_kernel", False)),
+        use_kernel=resolve_use_kernel(options.extra.get("use_kernel")),
         do_equalize=bool(options.extra.get("equalize", True)),
         merge_aware=bool(options.extra.get("merge_aware", False)),
         extra_slots=int(options.extra.get("extra_slots", 64)),

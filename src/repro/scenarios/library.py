@@ -224,6 +224,27 @@ register_scenario(
     TrafficSpec(family="uniform", n=32, s=4, delta=0.01, periods=8),
     description="Uniform all-to-all traffic — the rotor/VLB home turf",
 )
+# Large-n scaling tier: the regime the fused auction kernel exists for.
+# Short traces (few periods) keep wall-clock sane — per-period cost is what
+# these scenarios measure, not trace length.
+register_scenario(
+    "benchmark_large",
+    TrafficSpec(family="benchmark", n=256, s=4, delta=0.01, periods=4,
+                params={"m": 32}),
+    description="256-port m=32 benchmark — large-n matcher scaling tier",
+)
+register_scenario(
+    "permutations_large",
+    TrafficSpec(family="permutations", n=512, s=4, delta=0.01, periods=3,
+                params={"k": 16}),
+    description="512-port sum-of-16-permutations — large-n scaling tier",
+)
+register_scenario(
+    "pod_1024",
+    TrafficSpec(family="permutations", n=1024, s=4, delta=0.01, periods=2,
+                params={"k": 8}),
+    description="1024-port pod-scale smoke (k=8 perms, 2 periods)",
+)
 register_scenario(
     "collective_ring",
     TrafficSpec(family="collectives", n=32, s=4, delta=20e-6, periods=8,

@@ -575,6 +575,7 @@ def _online_scan_rows(trace, units, deltas, options):
     from ..core.jaxopt.matching import default_matcher
     from ..core.jaxopt.online_jax import spectra_online_scan
     from ..core.schedule_ir import DeviceSchedule
+    from ..kernels.backend import resolve_use_kernel
     from ..online import online_ir_to_schedule
 
     spec = trace.spec
@@ -582,7 +583,7 @@ def _online_scan_rows(trace, units, deltas, options):
         units.astype(np.float32),
         spec.s,
         deltas.astype(np.float32),
-        use_kernel=bool(options.extra.get("use_kernel", False)),
+        use_kernel=resolve_use_kernel(options.extra.get("use_kernel")),
         do_equalize=bool(options.extra.get("equalize", True)),
         merge_aware=bool(options.extra.get("merge_aware", False)),
         extra_slots=int(options.extra.get("extra_slots", 64)),
