@@ -1,0 +1,276 @@
+"""Serving-plane SLO benchmark: double-buffering, cache, admission.
+
+Three experiments against the ``repro.serve`` control plane, written to
+``out/BENCH_serve.json`` and gated in CI (``--check``):
+
+1. **speedup** — identical request stream served by the synchronous and
+   the async double-buffered loop, with the OCS install latency
+   calibrated to the measured device solve time (the regime where
+   overlap matters; ideal is ~2x, gate is ≥ {SPEEDUP_GATE}x).
+2. **cache** — open-loop Poisson mixed-tenant profile with the two-tier
+   schedule cache; gates cache hit rate (phase-cycling profile), sustained
+   schedules/sec, and end-to-end p99.
+3. **overload** — 2x overload burst through the admission controller;
+   gates that requests are SHED, the queue stays bounded, and every
+   ticket is accounted for.
+
+Usage:
+    python -m benchmarks.bench_serve          # full (tiny + mixed profiles)
+    python -m benchmarks.bench_serve --fast   # CI: tiny profile only
+    python -m benchmarks.bench_serve --check  # exit 1 on SLO gate failures
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+
+from .common import OUT_DIR
+
+# --- CI gates (headroom vs the slow-test assertions, which are stricter) --
+SPEEDUP_GATE = 1.2       # async vs sync drain (slow test asserts 1.3)
+CACHE_HIT_GATE = 0.70    # on the phase-cycling (tiny) profile
+THROUGHPUT_FLOOR = 10.0  # schedules/sec, warm, tiny profile
+P99_CEILING = 2.0        # end-to-end seconds, warm, tiny profile
+
+
+def _perm_demand(n: int, rng: np.random.Generator, k: int = 4) -> np.ndarray:
+    """Rotations of one random permutation — dense enough to be non-trivial."""
+    sigma = rng.permutation(n)
+    D = np.zeros((n, n))
+    for j in range(k):
+        D[np.arange(n), np.roll(sigma, j)] += rng.uniform(1.0, 4.0, size=n)
+    return D
+
+
+def _fast_options():
+    from repro.api import SolveOptions
+
+    return SolveOptions(validate=False, compute_lb=False)
+
+
+def bench_speedup(n: int = 16, B: int = 4, batches: int = 6) -> dict:
+    """Sync vs async drain on an identical stream, install ≈ solve time."""
+    from repro.api.jax_backend import dispatch_many_jax
+    from repro.serve.server import ScheduleServer
+
+    opts = _fast_options()
+    rng = np.random.default_rng(0)
+    mats = [_perm_demand(n, rng) for _ in range(B * batches)]
+
+    # Warm the compile cache at the serving shape, then measure the
+    # steady-state per-batch solve time to calibrate the install latency.
+    dispatch_many_jax(np.stack(mats[:B]), 4, 0.01, opts).collect()
+    t0 = time.perf_counter()
+    dispatch_many_jax(np.stack(mats[:B]), 4, 0.01, opts).collect()
+    solve_s = time.perf_counter() - t0
+    install = max(solve_s, 0.01)
+
+    def drain(mode: str) -> float:
+        srv = ScheduleServer(
+            4, 0.01, mode=mode, solver="spectra_jax", options=opts,
+            install_latency_s=install, max_batch=B,
+        )
+        for i, D in enumerate(mats):
+            srv.submit(f"t{i % 2}", D)
+        t0 = time.perf_counter()
+        srv.drain()
+        dt = time.perf_counter() - t0
+        assert len(srv.results) == len(mats)
+        return dt
+
+    sync_s = drain("sync")
+    async_s = drain("async")
+    return {
+        "experiment": "speedup",
+        "n": n,
+        "batch": B,
+        "batches": batches,
+        "solve_ms": 1e3 * solve_s,
+        "install_ms": 1e3 * install,
+        "sync_s": sync_s,
+        "async_s": async_s,
+        "speedup": sync_s / async_s,
+    }
+
+
+def bench_cache(profile: str, duration: float, rate: float) -> dict:
+    """Open-loop profile through the cache-enabled async server.
+
+    Two identical passes: the first warms XLA's compile cache (burst
+    submit + drain is deterministic, so both passes see the same batch
+    shapes); only the second pass is measured.
+    """
+    from repro.serve.cache import ScheduleCache
+    from repro.serve.loadgen import (
+        make_workload, mixed_profile, submit_all, tiny_profile,
+    )
+    from repro.serve.server import ScheduleServer
+
+    tenants = (
+        tiny_profile(n=8, rate=rate) if profile == "tiny"
+        else mixed_profile(rate=rate)
+    )
+    wl = make_workload(tenants, duration=duration, seed=3)
+    opts = _fast_options()
+
+    def run_pass():
+        srv = ScheduleServer(
+            4, 0.01, mode="async", solver="spectra_jax", options=opts,
+            cache=ScheduleCache(capacity=64), max_batch=4,
+        )
+        submit_all(srv, wl)
+        srv.drain()
+        return srv
+
+    run_pass()  # warm compile cache
+    srv = run_pass()
+    m = srv.metrics.export()
+    assert m["schedules"] == len(wl)
+    by_source = {"device": 0, "cache": 0}
+    for r in srv.results.values():
+        by_source["cache" if r.source.startswith("cache") else "device"] += 1
+    return {
+        "experiment": "cache",
+        "profile": profile,
+        "requests": len(wl),
+        "duration_s": duration,
+        "cache_hit_rate": m["cache_hit_rate"],
+        "schedules_per_sec": m["schedules_per_sec"],
+        "p50_e2e_s": m["stages"]["e2e"]["p50_s"],
+        "p99_e2e_s": m["stages"]["e2e"]["p99_s"],
+        "served_from": by_source,
+        "metrics": m,
+    }
+
+
+def bench_overload(rate: float = 120.0, duration: float = 0.5) -> dict:
+    """2x overload burst: shed verdicts must appear, queue stays bounded."""
+    from repro.serve.admission import AdmissionController
+    from repro.serve.loadgen import make_workload, tiny_profile
+    from repro.serve.server import ScheduleServer
+
+    max_queue = 8
+    wl = make_workload(tiny_profile(n=8, rate=rate), duration=duration, seed=5)
+    srv = ScheduleServer(
+        4, 0.01, mode="async", solver="spectra_jax", options=_fast_options(),
+        admission=AdmissionController(rate=rate / 4, burst=10,
+                                      max_queue=max_queue),
+        max_batch=4,
+    )
+    max_depth = 0
+    for i, a in enumerate(wl):
+        srv.submit(a.tenant, a.D, now=a.t)
+        max_depth = max(max_depth, len(srv))
+        if i % 12 == 11:  # server drains ~3x slower than the burst offers
+            srv.step()
+    srv.drain()
+    m = srv.metrics.export()
+    return {
+        "experiment": "overload",
+        "requests": len(wl),
+        "max_queue": max_queue,
+        "max_depth": max_depth,
+        "shed": m["shed"],
+        "admitted": m["admitted"],
+        "degraded": m["degraded"],
+        "completed": len(srv.results),
+        "accounted": len(srv.results) + len(srv.shed_tickets),
+    }
+
+
+def run(fast: bool) -> list[dict]:
+    rows = []
+    row = bench_speedup()
+    print(f"speedup    async {row['speedup']:.2f}x vs sync "
+          f"(solve {row['solve_ms']:.1f}ms, install {row['install_ms']:.1f}ms)",
+          flush=True)
+    rows.append(row)
+
+    profiles = [("tiny", 0.6, 60.0)]
+    if not fast:
+        profiles.append(("mixed", 0.8, 40.0))
+    for profile, duration, rate in profiles:
+        row = bench_cache(profile, duration, rate)
+        print(f"cache      {profile:6s} hit={row['cache_hit_rate']:.2f} "
+              f"{row['schedules_per_sec']:.0f} sched/s "
+              f"p99={row['p99_e2e_s'] * 1e3:.0f}ms "
+              f"({row['requests']} reqs)", flush=True)
+        rows.append(row)
+
+    row = bench_overload()
+    print(f"overload   shed={row['shed']}/{row['requests']} "
+          f"max_depth={row['max_depth']} (bound {row['max_queue']})",
+          flush=True)
+    rows.append(row)
+    return rows
+
+
+def check(rows: list[dict]) -> list[str]:
+    """SLO gates; see module docstring."""
+    failures = []
+    for r in rows:
+        if r["experiment"] == "speedup" and r["speedup"] < SPEEDUP_GATE:
+            failures.append(
+                f"double-buffering speedup {r['speedup']:.2f}x < "
+                f"{SPEEDUP_GATE}x (solve {r['solve_ms']:.1f}ms)"
+            )
+        if r["experiment"] == "cache" and r["profile"] == "tiny":
+            if r["cache_hit_rate"] < CACHE_HIT_GATE:
+                failures.append(
+                    f"cache hit rate {r['cache_hit_rate']:.2f} < "
+                    f"{CACHE_HIT_GATE} on phase-cycling profile"
+                )
+            if r["schedules_per_sec"] < THROUGHPUT_FLOOR:
+                failures.append(
+                    f"throughput {r['schedules_per_sec']:.1f} sched/s < "
+                    f"{THROUGHPUT_FLOOR} floor"
+                )
+            if r["p99_e2e_s"] > P99_CEILING:
+                failures.append(
+                    f"e2e p99 {r['p99_e2e_s']:.2f}s > {P99_CEILING}s ceiling"
+                )
+        if r["experiment"] == "overload":
+            if r["shed"] == 0:
+                failures.append("overload burst shed nothing")
+            if r["max_depth"] > r["max_queue"]:
+                failures.append(
+                    f"queue depth {r['max_depth']} exceeded bound "
+                    f"{r['max_queue']}"
+                )
+            if r["accounted"] != r["requests"]:
+                failures.append(
+                    f"{r['accounted']} tickets accounted != "
+                    f"{r['requests']} submitted"
+                )
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fast", action="store_true",
+                    help="tiny profile only (CI)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 on SLO gate failures")
+    args = ap.parse_args(argv)
+
+    rows = run(fast=args.fast)
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    out = OUT_DIR / "BENCH_serve.json"
+    out.write_text(json.dumps({"workload": "serve-control-plane",
+                               "rows": rows}, indent=2))
+    print(f"wrote {out}")
+    if args.check:
+        failures = check(rows)
+        for f in failures:
+            print(f"GATE FAIL: {f}", file=sys.stderr)
+        return 1 if failures else 0
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

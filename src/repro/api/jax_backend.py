@@ -236,6 +236,87 @@ def solve_spectra_jax(problem: Problem, options: SolveOptions) -> SolveReport:
     return batch.report(0, problem, options, runtime_s, device_lb=False)
 
 
+class PendingBatch:
+    """A dispatched-but-uncollected fused batch: the async serving handle.
+
+    ``dispatch_many_jax`` returns immediately after enqueueing the fused
+    device call — JAX dispatches asynchronously, so the solve runs on the
+    XLA worker threads while the host does other work (e.g. installing the
+    *previous* period's schedules — the double-buffered serving loop in
+    ``repro.serve.server``). ``collect()`` performs the only
+    synchronization: the ``np.asarray`` conversions inside ``_HostBatch``
+    block on each buffer as it is read — there is no
+    ``jax.block_until_ready`` barrier anywhere on this path.
+    """
+
+    def __init__(self, res: E2EResult, mats, s, deltas, options, kwargs, t0):
+        self._res = res
+        self._mats = mats
+        self._s = s
+        self._deltas = deltas
+        self._options = options
+        self._kwargs = kwargs
+        self._t0 = t0
+        self._reports: list[SolveReport] | None = None
+
+    def __len__(self) -> int:
+        return int(self._mats.shape[0])
+
+    @property
+    def ready(self) -> bool:
+        """Non-blocking readiness probe of the device computation."""
+        try:
+            return bool(self._res.makespan.is_ready())
+        except AttributeError:  # non-jax array (already concrete)
+            return True
+
+    def collect(self) -> list[SolveReport]:
+        """Wait for the device results and build the per-ticket reports.
+
+        Idempotent — repeated calls return the same report list. Runtime
+        accounting spans dispatch → collection (the wall-clock the device
+        work occupied, whether or not the host overlapped it)."""
+        if self._reports is None:
+            batch = _HostBatch(self._res, self._deltas, **self._kwargs)
+            device_s = time.perf_counter() - self._t0
+            B = len(self)
+            self._reports = [
+                batch.report(
+                    b,
+                    Problem(self._mats[b], self._s, float(self._deltas[b])),
+                    self._options,
+                    device_s / B,
+                    extras={"batched": True, "batch_size": B, "fused": True},
+                )
+                for b in range(B)
+            ]
+        return self._reports
+
+
+def dispatch_many_jax(
+    Ds: np.ndarray,
+    s: int,
+    delta,
+    options: SolveOptions,
+) -> PendingBatch:
+    """Enqueue one fused batched solve and return without waiting.
+
+    The returned ``PendingBatch`` owns the in-flight device arrays;
+    ``collect()`` synchronizes. See ``solve_many_jax`` for the batching
+    semantics — this is the same dispatch with the barrier split off."""
+    # Only the device input is float32; reports validate against the
+    # caller's matrices, exactly like the single-instance path.
+    mats = np.asarray(Ds, dtype=np.float64)
+    B = mats.shape[0]
+    deltas = np.broadcast_to(np.asarray(delta, dtype=np.float64), (B,))
+    kwargs = _e2e_kwargs(options, int(mats.shape[-1]))
+    t0 = time.perf_counter()
+    res = spectra_jax_e2e_many(
+        mats.astype(np.float32), s, deltas.astype(np.float32), **kwargs
+    )
+    return PendingBatch(res, mats, s, deltas, options, kwargs, t0)
+
+
 def solve_many_jax(
     Ds: np.ndarray,
     s: int,
@@ -248,27 +329,6 @@ def solve_many_jax(
     §IV lower bounds come from the same fused call (float32, parity ≤1e-7
     rel) instead of a per-instance host loop. ``delta`` is a scalar or a
     per-instance (B,) vector (trace-aware δ sweeps) — the fused call vmaps
-    over it either way."""
-    # Only the device input is float32; reports validate against the
-    # caller's matrices, exactly like the single-instance path.
-    mats = np.asarray(Ds, dtype=np.float64)
-    B = mats.shape[0]
-    deltas = np.broadcast_to(np.asarray(delta, dtype=np.float64), (B,))
-    kwargs = _e2e_kwargs(options, int(mats.shape[-1]))
-    t0 = time.perf_counter()
-    res = spectra_jax_e2e_many(
-        mats.astype(np.float32), s, deltas.astype(np.float32), **kwargs
-    )
-    jax.block_until_ready(res.makespan)
-    device_s = time.perf_counter() - t0
-    batch = _HostBatch(res, deltas, **kwargs)
-    return [
-        batch.report(
-            b,
-            Problem(mats[b], s, float(deltas[b])),
-            options,
-            device_s / B,
-            extras={"batched": True, "batch_size": B, "fused": True},
-        )
-        for b in range(B)
-    ]
+    over it either way. Synchronous dispatch + collect; async callers use
+    ``dispatch_many_jax`` and collect when they need the results."""
+    return dispatch_many_jax(Ds, s, delta, options).collect()

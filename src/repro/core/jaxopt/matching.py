@@ -411,7 +411,8 @@ def _polish_2swap(W, perm, max_swaps: int):
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "num_phases", "max_iters", "use_kernel", "with_prices", "interpret"
+        "num_phases", "max_iters", "use_kernel", "with_prices", "interpret",
+        "with_iters",
     ),
 )
 def match_auction_fused(
@@ -423,6 +424,7 @@ def match_auction_fused(
     prices0: jax.Array | None = None,
     with_prices: bool = False,
     interpret: bool | None = None,
+    with_iters: bool = False,
 ) -> tuple[jax.Array, ...]:
     """Fully fused forward ε-scaling auction. Returns ``(perm, converged)``.
 
@@ -439,7 +441,21 @@ def match_auction_fused(
     2-opt — a cheap worst-case guard against ε-floor transposition errors
     (measured a no-op on the benchmark workloads; see its docstring).
     ``interpret`` forces/disables Pallas interpret mode (``None`` → auto:
-    interpret off-TPU).
+    interpret off-TPU). ``with_iters=True`` appends the total bidding-round
+    count (after prices, when both are requested) — the observable that
+    shows cross-period warm starts converging in fewer rounds; the kernel
+    path reports ``-1`` (its loop counter stays on-chip).
+
+    **Warm ε-entry:** supplying ``prices0`` is declared "equivalent to
+    having run the earlier phases already" (see ``match_auction``) — here
+    that equivalence is cashed in. A warm dispatch enters the ε grid at its
+    *tail* (the last ``max(2, num_phases // 2)`` phases), so cross-period
+    price carry pays for roughly half the bidding phases instead of
+    re-running the full schedule against already-converged prices. The
+    optimality guarantee is unchanged — it comes from the final phase
+    completing at the same ulp-floored ``eps_final`` (``converged`` still
+    reports budget exhaustion); only the ramp that warm prices make
+    redundant is skipped. Cold dispatches (no ``prices0``) are untouched.
     """
     from ...kernels.auction_fused.ops import fused_auction
 
@@ -449,25 +465,31 @@ def match_auction_fused(
         num_phases = default_num_phases(n)
     if max_iters is None:
         max_iters = default_max_iters(n)
-    init_prices = (
-        jnp.zeros((n,), jnp.float32)
-        if prices0 is None
-        else jnp.asarray(prices0, jnp.float32)
-    )
-    row2col, col2row, prices = fused_auction(
+    eps_schedule = _eps_schedule(W, num_phases)
+    if prices0 is None:
+        init_prices = jnp.zeros((n,), jnp.float32)
+    else:
+        init_prices = jnp.asarray(prices0, jnp.float32)
+        eps_schedule = eps_schedule[-max(2, num_phases // 2):]
+    out = fused_auction(
         W,
         init_prices,
-        _eps_schedule(W, num_phases),
+        eps_schedule,
         max_iters=max_iters,
         use_kernel=use_kernel,
         interpret=interpret,
+        with_iters=with_iters,
     )
+    row2col, col2row, prices = out[:3]
     converged = (row2col >= 0).all()
     perm = _complete_greedy(row2col, col2row)
     perm = _polish_2swap(W, perm, max_swaps=2 * n)
+    ret: tuple[jax.Array, ...] = (perm, converged)
     if with_prices:
-        return perm, converged, prices
-    return perm, converged
+        ret = ret + (prices,)
+    if with_iters:
+        ret = ret + (out[3],)
+    return ret if len(ret) > 2 else (perm, converged)
 
 
 # --------------------------------------------------------------- registry

@@ -18,6 +18,16 @@ State carried across periods (``OnlineDeviceState``):
     prices      (n,)   float32 matcher dual-price carry (see ``matching``)
     fresh_ratio ()     float32 tightest fresh-decomposition weight ratio
                                observed — the warm-quality gate reference
+    cache_*     (C,…)          device-resident support-pattern cache (the
+                               host controller's ``support_cache`` in the
+                               scan carry): memoized supports, perm sets,
+                               live counts, quality references, and a
+                               round-robin eviction cursor; C=0 disables
+
+The warm tiers mirror the host controller: the previous period's set is
+tried first (adjacency), then — only if that fails — the support-pattern
+cache is probed with this period's exact support, serving phase-cycling
+traffic (e.g. MoE routing phases) without re-decomposing.
 
 Per-period algorithm (``online_step_jax``):
 
@@ -77,6 +87,15 @@ class OnlineDeviceState(NamedTuple):
     prices: jax.Array      # (n,) float32; matcher dual-price carry
     fresh_ratio: jax.Array  # () float32; last FRESH dec's Σα / max-line-sum
                             # — the warm-acceptance quality reference
+    # Device-resident support-pattern cache (the host controller's
+    # ``SwitchState.support_cache`` moved into the scan carry). Capacity C
+    # is a *shape* — it travels with the state, so jitted steps need no
+    # extra static argument; C=0 disables the cache with zero-size arrays.
+    cache_supports: jax.Array  # (C, n, n) bool — memoized support patterns
+    cache_perms: jax.Array     # (C, n, n) int32 — each pattern's perm set
+    cache_k: jax.Array         # (C,) int32 — live rounds per entry (0=empty)
+    cache_ratio: jax.Array     # (C,) float32 — quality reference at insert
+    cache_ptr: jax.Array       # () int32 — round-robin eviction cursor
 
 
 class OnlineStepResult(NamedTuple):
@@ -92,20 +111,31 @@ class OnlineStepResult(NamedTuple):
     k: jax.Array                   # () int32 — decomposition rounds
     converged: jax.Array           # () bool — matcher convergence
     eq_exhausted: jax.Array        # () bool — EQUALIZE headroom exhausted
+    cache_hit: jax.Array           # () bool — warm came from the support cache
 
 
-def online_initial_state(n: int, s: int) -> OnlineDeviceState:
-    """Fresh controller state: no configurations installed anywhere."""
+def online_initial_state(
+    n: int, s: int, cache_size: int = 0
+) -> OnlineDeviceState:
+    """Fresh controller state: no configurations installed anywhere.
+
+    ``cache_size`` sizes the device-resident support-pattern cache carried
+    with the state (0 = disabled — the pre-cache state shape, and the
+    default for raw steps; the serving layer and ``run_scenario`` opt in)."""
+    identity = jnp.arange(n, dtype=jnp.int32)[None, :]
     return OnlineDeviceState(
         installed=jnp.full((s, n), -1, jnp.int32),
-        prev_perms=jnp.broadcast_to(
-            jnp.arange(n, dtype=jnp.int32)[None, :], (n, n)
-        ),
+        prev_perms=jnp.broadcast_to(identity, (n, n)),
         prev_k=jnp.int32(0),
         prices=jnp.zeros((n,), jnp.float32),
         # +inf = "no fresh reference yet"; harmless because warm-start
         # cannot trigger before the first (necessarily fresh) period.
         fresh_ratio=jnp.float32(jnp.inf),
+        cache_supports=jnp.zeros((cache_size, n, n), bool),
+        cache_perms=jnp.broadcast_to(identity[None], (cache_size, n, n)),
+        cache_k=jnp.zeros((cache_size,), jnp.int32),
+        cache_ratio=jnp.full((cache_size,), jnp.inf, jnp.float32),
+        cache_ptr=jnp.int32(0),
     )
 
 
@@ -293,39 +323,75 @@ def _online_step(
         )
         return dec_, prices_out if warm_prices else prices_
 
-    if warm_start:
-        alphas_w, residual = _warm_refine(D, state.prev_perms, state.prev_k)
+    S = D > 0
+    deg = jnp.maximum(S.sum(axis=0).max(), S.sum(axis=1).max())
+    cache_size = state.cache_supports.shape[0]
+
+    def try_warm(perms, k, ref_ratio):
+        """Re-REFINE ``D`` along a candidate permutation set; returns the
+        packed decomposition plus its coverage/quality acceptance.
+
+        Quality gate: re-REFINE along a stale permutation set can badly
+        over-provision when weights drift (coverage alone doesn't bound
+        it). Σα / max-line-sum is scale-free and ≥ 1 for any cover, so
+        comparing against the reference FRESH decomposition's ratio bounds
+        the warm excess to ``warm_slack``; the round count may not exceed
+        degree(D) (a fresh decomposition's exact k) either.
+        """
+        alphas_w, residual = _warm_refine(D, perms, k)
         covered = residual.max() <= 1e-5 * jnp.maximum(D.max(), 1e-30)
         live = alphas_w > 0
         order = jnp.argsort(~live, stable=True)
-        warm_dec = JaxDecomposition(
-            perms=state.prev_perms[order],
+        dec_ = JaxDecomposition(
+            perms=perms[order],
             alphas=jnp.where(live, alphas_w, 0.0)[order],
             k=live.sum().astype(jnp.int32),
             converged=jnp.bool_(True),
         )
-        # Quality gate: re-REFINE along a stale permutation set can badly
-        # over-provision when weights drift (coverage alone doesn't bound
-        # it). Σα / max-line-sum is scale-free and ≥ 1 for any cover, so
-        # comparing against the last FRESH decomposition's ratio bounds the
-        # warm excess to ``warm_slack``; the round count may not exceed
-        # degree(D) (a fresh decomposition's exact k) either.
-        S = D > 0
-        deg = jnp.maximum(S.sum(axis=0).max(), S.sum(axis=1).max())
         warm_ratio = alphas_w.sum() / line_sum_safe
         quality_ok = (
-            (warm_dec.k <= deg)
-            & (warm_ratio <= state.fresh_ratio * (1.0 + warm_slack))
+            (dec_.k <= deg) & (warm_ratio <= ref_ratio * (1.0 + warm_slack))
         )
-        use_warm = covered & (state.prev_k > 0) & quality_ok
+        return dec_, covered & quality_ok
+
+    if warm_start:
+        warm_dec, adj_ok = try_warm(
+            state.prev_perms, state.prev_k, state.fresh_ratio
+        )
+        use_adj = adj_ok & (state.prev_k > 0)
+        if cache_size:
+            # Support-pattern cache tier: consulted only when the adjacency
+            # warm start fails — the exact lookup order of the host
+            # controller. An entry matches when its memoized support equals
+            # this period's (and is live); its perm set then re-REFINEs
+            # under the same coverage/quality gates, referenced against the
+            # quality ratio memoized at insert time.
+            match = (
+                (state.cache_supports == S[None]).all(axis=(1, 2))
+                & (state.cache_k > 0)
+            )
+            hit = match.any()
+            slot = jnp.argmax(match)
+            cache_dec, cache_ok = try_warm(
+                state.cache_perms[slot],
+                jnp.where(hit, state.cache_k[slot], 0),
+                state.cache_ratio[slot],
+            )
+            use_cache = ~use_adj & hit & cache_ok
+        else:
+            cache_dec, use_cache = warm_dec, jnp.bool_(False)
+        use_warm = use_adj | use_cache
+        warm_pick = jax.tree_util.tree_map(
+            lambda a, c: jnp.where(use_adj, a, c), warm_dec, cache_dec
+        )
         dec, prices = jax.lax.cond(
             use_warm,
-            lambda op: (warm_dec, op[1]),
+            lambda op: (warm_pick, op[1]),
             fresh,
             (D, state.prices),
         )
     else:
-        use_warm = jnp.bool_(False)
+        use_warm = use_cache = jnp.bool_(False)
         dec, prices = fresh((D, state.prices))
 
     # ---- 2+3. two candidates over the same decomposition -----------------
@@ -364,16 +430,44 @@ def _online_step(
     # never raise the bar, and the tightest fresh ratio ever observed is
     # the honest reference. Zero-demand periods (no line sum) leave it
     # untouched.
+    new_fresh_ratio = jnp.where(
+        use_warm | (line_sum <= 0),
+        state.fresh_ratio,
+        jnp.minimum(state.fresh_ratio, dec.alphas.sum() / line_sum_safe),
+    )
+    if cache_size:
+        # Insert/update every period (the host controller's semantics):
+        # a matching support slot is updated in place, otherwise the
+        # round-robin cursor picks the eviction victim. Stored quality
+        # reference is the post-ratchet fresh ratio, exactly what the host
+        # memoizes alongside the perm set.
+        ins_match = (state.cache_supports == S[None]).all(axis=(1, 2))
+        ins_hit = ins_match.any()
+        ins_slot = jnp.where(
+            ins_hit, jnp.argmax(ins_match), state.cache_ptr % cache_size
+        )
+        cache_supports = state.cache_supports.at[ins_slot].set(S)
+        cache_perms = state.cache_perms.at[ins_slot].set(dec.perms)
+        cache_k = state.cache_k.at[ins_slot].set(dec.k)
+        cache_ratio = state.cache_ratio.at[ins_slot].set(new_fresh_ratio)
+        cache_ptr = jnp.where(ins_hit, state.cache_ptr, state.cache_ptr + 1)
+    else:
+        cache_supports = state.cache_supports
+        cache_perms = state.cache_perms
+        cache_k = state.cache_k
+        cache_ratio = state.cache_ratio
+        cache_ptr = state.cache_ptr
     new_state = OnlineDeviceState(
         installed=_last_served(ds, reused, state.installed, s),
         prev_perms=dec.perms,
         prev_k=dec.k,
         prices=prices,
-        fresh_ratio=jnp.where(
-            use_warm | (line_sum <= 0),
-            state.fresh_ratio,
-            jnp.minimum(state.fresh_ratio, dec.alphas.sum() / line_sum_safe),
-        ),
+        fresh_ratio=new_fresh_ratio,
+        cache_supports=cache_supports,
+        cache_perms=cache_perms,
+        cache_k=cache_k,
+        cache_ratio=cache_ratio,
+        cache_ptr=cache_ptr,
     )
     result = OnlineStepResult(
         schedule=ds,
@@ -386,6 +480,7 @@ def _online_step(
         k=dec.k,
         converged=dec.converged,
         eq_exhausted=eq_exhausted,
+        cache_hit=use_cache,
     )
     return result, new_state
 
@@ -428,7 +523,9 @@ def online_step_jax(
     )
 
 
-@functools.partial(jax.jit, static_argnames=_ONLINE_STATICS)
+@functools.partial(
+    jax.jit, static_argnames=_ONLINE_STATICS + ("cache_size",)
+)
 def spectra_online_scan(
     Ds: jax.Array,
     s: int,
@@ -443,12 +540,15 @@ def spectra_online_scan(
     warm_start: bool = True,
     warm_prices: bool = False,
     warm_slack: float = 0.05,
+    cache_size: int = 0,
 ) -> tuple[OnlineStepResult, OnlineDeviceState]:
     """Roll the online step over a whole (T, n, n) trace in ONE dispatch.
 
     ``lax.scan`` over the T axis with the switch state as carry — the
     device-resident analogue of a controller loop, minus T-1 host
     round-trips. ``deltas`` is a scalar or a (T,) per-period δ vector.
+    ``cache_size`` sizes the in-carry support-pattern cache (0 = off), the
+    device analogue of the host controller's phase-cycling memoization.
     Returns the per-period results stacked over T plus the final state.
     """
     Ds = jnp.asarray(Ds, jnp.float32)
@@ -468,6 +568,6 @@ def spectra_online_scan(
         return state, result
 
     final_state, results = jax.lax.scan(
-        step, online_initial_state(n, s), (Ds, deltas)
+        step, online_initial_state(n, s, cache_size), (Ds, deltas)
     )
     return results, final_state

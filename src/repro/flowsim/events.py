@@ -21,6 +21,10 @@ sequentially on, in priority order:
 
 Circuits are processed in deterministic (switch, slot) order and debit
 shared queues immediately, so two windows can never serve the same byte.
+With ``options.arrival="uniform"`` each flow is released at a uniform
+time inside the period instead of at t=0; a circuit serves a flow only
+from ``max(window position, release)``, forfeiting the capacity before
+it, and VLB may not detour bytes that have not been released yet.
 Completion times are stamped mid-window at the exact chunk end — the
 engine knows when each byte lands because service within a window is
 sequential.
@@ -88,6 +92,14 @@ def simulate_flows(
             raise AssertionError("configuration is not a permutation")
 
     flows = FlowTable(flows_from_demand(D, tol=_EPS), tol=tol)
+    staggered = options.arrival == "uniform"
+    if staggered:
+        # Releases are drawn per flow in the FlowTable's (row-major) order,
+        # so a fixed seed reproduces the same arrival pattern exactly.
+        rng = np.random.default_rng(options.arrival_seed)
+        horizon = options.arrival_span * tl.finish
+        for f in flows.flows:
+            f.release = float(rng.uniform(0.0, horizon)) if horizon > 0 else 0.0
     buffers = FabricBuffers(D, buffer_limit=options.buffer_limit)
     rate = options.line_rate
     busy = np.zeros(tl.s, dtype=np.float64)
@@ -129,16 +141,35 @@ def simulate_flows(
                     flows.deliver(origin, dst, x, t_land, indirect=True)
                 # 2. direct: this circuit's own VOQ.
                 if cap - used > _EPS:
-                    x = buffers.take_direct(src, dst, cap - used)
-                    if x > 0:
-                        used += x
-                        t_land = min(t0 + used / rate, t1)
-                        flows.deliver(src, dst, x, t_land)
+                    if not staggered:
+                        x = buffers.take_direct(src, dst, cap - used)
+                        if x > 0:
+                            used += x
+                            t_land = min(t0 + used / rate, t1)
+                            flows.deliver(src, dst, x, t_land)
+                    else:
+                        # Service can't start before the flow's release;
+                        # window capacity before it is forfeited.
+                        f = flows.get(src, dst)
+                        rel = f.release if f is not None else 0.0
+                        start = max(t0 + used / rate, rel)
+                        budget = min(cap - used, (t1 - start) * rate)
+                        if budget > _EPS:
+                            x = buffers.take_direct(src, dst, budget)
+                            if x > 0:
+                                used += x
+                                t_land = min(start + x / rate, t1)
+                                flows.deliver(src, dst, x, t_land)
                 # 3. VLB hop-1: detour other destinations with the leftover.
                 if vlb and cap - used > _EPS:
                     for d, want in vlb_injections(
                         buffers, src, dst, cap - used
                     ):
+                        if staggered:
+                            fd = flows.get(src, d)
+                            # Unreleased bytes can't be detoured either.
+                            if fd is not None and fd.release > t0:
+                                continue
                         x = buffers.take_direct(src, d, want)
                         if x <= 0:
                             continue
@@ -186,5 +217,15 @@ def simulate_flows(
             "vlb": vlb,
             "windows": len(tl.windows),
             "intervals": len(active),
+            **(
+                {
+                    "arrival": options.arrival,
+                    "releases": np.array(
+                        [f.release for f in flows.flows], dtype=np.float64
+                    ),
+                }
+                if staggered
+                else {}
+            ),
         },
     )

@@ -23,6 +23,7 @@ class Flow:
     delivered: float = 0.0
     indirected: float = 0.0          # units that arrived via a VLB detour
     fct: float = float("inf")        # completion time; inf until complete
+    release: float = 0.0             # instant the bytes become sendable
 
     @property
     def remaining(self) -> float:

@@ -20,6 +20,7 @@ import numpy as np
 __all__ = ["FlowSimOptions", "FlowStats", "FlowSimReport"]
 
 _INDIRECTION = ("auto", "none", "vlb")
+_ARRIVAL = ("start", "uniform")
 
 
 @dataclass(frozen=True)
@@ -44,12 +45,28 @@ class FlowSimOptions:
       matrix simulator's verdict tolerance: 1e-9 for float64 host
       schedules, 1e-4 for float32 device (``"jax"``) schedules, whose
       alphas legitimately undershoot demand at single-precision scale.
+    * ``arrival`` — when each flow's bytes become sendable. ``"start"``
+      (default) is the classic all-at-t=0 replay the schedule was solved
+      for; ``"uniform"`` releases each flow at an independent uniform
+      time in ``[0, arrival_span · finish]`` — the demand estimate a real
+      controller schedules is collected *during* the period, so bytes
+      trickle in while circuits are already up. Capacity a circuit sees
+      before its flow's release is lost (no retroactive service), so a
+      schedule that is exact at ``line_rate=1`` generally needs headroom
+      to complete under staggered arrivals.
+    * ``arrival_span`` — fraction of the timeline finish over which
+      uniform releases spread (default 0.5).
+    * ``arrival_seed`` — RNG seed for the release draw (deterministic
+      replays).
     """
 
     line_rate: float = 1.0
     buffer_limit: float = math.inf
     indirection: str = "auto"
     tol: float | None = None
+    arrival: str = "start"
+    arrival_span: float = 0.5
+    arrival_seed: int = 0
 
     def __post_init__(self) -> None:
         if self.line_rate <= 0:
@@ -64,6 +81,14 @@ class FlowSimOptions:
             raise ValueError(
                 f"indirection must be one of {_INDIRECTION}, "
                 f"got {self.indirection!r}"
+            )
+        if self.arrival not in _ARRIVAL:
+            raise ValueError(
+                f"arrival must be one of {_ARRIVAL}, got {self.arrival!r}"
+            )
+        if self.arrival_span < 0:
+            raise ValueError(
+                f"arrival_span must be nonnegative, got {self.arrival_span}"
             )
 
     @classmethod

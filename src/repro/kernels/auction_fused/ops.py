@@ -27,7 +27,10 @@ _LANE = 128
 
 
 @functools.partial(
-    jax.jit, static_argnames=("max_iters", "use_kernel", "block_cols", "interpret")
+    jax.jit,
+    static_argnames=(
+        "max_iters", "use_kernel", "block_cols", "interpret", "with_iters"
+    ),
 )
 def fused_auction(
     W: jax.Array,
@@ -38,12 +41,20 @@ def fused_auction(
     use_kernel: bool = True,
     block_cols: int | None = None,
     interpret: bool | None = None,
+    with_iters: bool = False,
 ):
     """Run the fused ε-scaling auction; returns ``(r2c, c2r, prices)`` at
-    the caller's (unpadded) n. ``interpret=None`` → auto (off on TPU)."""
+    the caller's (unpadded) n. ``interpret=None`` → auto (off on TPU).
+
+    ``with_iters=True`` appends the total bidding-round count. The Pallas
+    kernel keeps its loop counter on-chip and doesn't export it, so the
+    kernel path reports ``-1`` ("not tracked"); the jnp reference reports
+    the exact count — that is the path warm-start round assertions use.
+    """
     if not use_kernel:
         return fused_auction_ref(
-            W, prices0, eps_schedule, max_iters=max_iters
+            W, prices0, eps_schedule, max_iters=max_iters,
+            with_iters=with_iters,
         )
     if interpret is None:
         interpret = not on_tpu()
@@ -67,4 +78,6 @@ def fused_auction(
         max_iters=max_iters,
         interpret=bool(interpret),
     )
+    if with_iters:
+        return r2c[:n], c2r[:n], prices[:n], jnp.int32(-1)
     return r2c[:n], c2r[:n], prices[:n]

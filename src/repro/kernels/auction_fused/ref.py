@@ -54,18 +54,21 @@ def _round(W, r2c, c2r, prices, eps, rows, cols):
     return r2c, c2r, prices
 
 
-@functools.partial(jax.jit, static_argnames=("max_iters",))
+@functools.partial(jax.jit, static_argnames=("max_iters", "with_iters"))
 def fused_auction_ref(
     W: jax.Array,
     prices0: jax.Array,
     eps_schedule: jax.Array,
     *,
     max_iters: int,
+    with_iters: bool = False,
 ):
     """ε-scaling auction over ``eps_schedule``; returns (r2c, c2r, prices).
 
     Each phase restarts the assignment maps from scratch but keeps the
     learned prices — identical to the kernel's per-phase grid steps.
+    ``with_iters=True`` appends the total bidding-round count summed over
+    phases — the convergence-cost observable warm-started prices reduce.
     """
     W = W.astype(jnp.float32)
     n = W.shape[0]
@@ -84,7 +87,7 @@ def fused_auction_ref(
             r2c, c2r, prices = _round(W, r2c, c2r, prices, eps, rows, cols)
             return r2c, c2r, prices, it + 1
 
-        r2c, c2r, prices, _ = jax.lax.while_loop(
+        r2c, c2r, prices, it = jax.lax.while_loop(
             cond,
             body,
             (
@@ -94,12 +97,14 @@ def fused_auction_ref(
                 jnp.int32(0),
             ),
         )
-        return (r2c, c2r, prices), None
+        return (r2c, c2r, prices), it
 
     state = (
         jnp.full((n,), -1, jnp.int32),
         jnp.full((n,), -1, jnp.int32),
         jnp.asarray(prices0, jnp.float32),
     )
-    (r2c, c2r, prices), _ = jax.lax.scan(phase, state, eps_schedule)
+    (r2c, c2r, prices), phase_iters = jax.lax.scan(phase, state, eps_schedule)
+    if with_iters:
+        return r2c, c2r, prices, phase_iters.sum()
     return r2c, c2r, prices

@@ -17,9 +17,12 @@ and ``extras`` carries the reuse accounting (``reuse_count``,
 ``repro.serve.SolverService.open_session`` wraps the state threading.
 
 Extra knobs (both solvers): ``warm_start`` (default True), ``merge_aware``,
-``equalize``; device also honors ``use_kernel``, ``extra_slots``,
-``matcher`` (autotuned by n when unset), ``repair_rounds``, and
-``warm_prices`` (carry the auction's dual prices across periods).
+``equalize``, ``cache_size`` (support-pattern cache capacity: host default
+8; device default 0 — the device cache lives in the carried state's shape,
+so it must be chosen at session start); device also honors ``use_kernel``,
+``extra_slots``, ``matcher`` (autotuned by n when unset),
+``repair_rounds``, and ``warm_prices`` (carry the auction's dual prices
+across periods).
 """
 
 from __future__ import annotations
@@ -106,6 +109,7 @@ def solve_spectra_online(problem: Problem, options: SolveOptions) -> SolveReport
         warm_slack=float(options.extra.get("warm_slack", 0.05)),
         merge_aware=bool(options.extra.get("merge_aware", False)),
         do_equalize=bool(options.extra.get("equalize", True)),
+        cache_size=int(options.extra.get("cache_size", 8)),
     )
     if state is not None:
         ctl.state = state
@@ -152,7 +156,12 @@ def solve_spectra_online_jax(
 
     state = options.extra.get("online")
     if state is None:
-        state = online_initial_state(problem.n, problem.s)
+        # The cache capacity is part of the state's *shape*: fixed at
+        # session start, carried (and honored) by every subsequent step.
+        state = online_initial_state(
+            problem.n, problem.s,
+            cache_size=int(options.extra.get("cache_size", 0)),
+        )
     elif not isinstance(state, OnlineDeviceState):
         raise TypeError(
             "extra['online'] must be an OnlineDeviceState, got "
@@ -204,6 +213,7 @@ def solve_spectra_online_jax(
         "delta_avoided": delta * reuse_count,
         "stateless_makespan": float(res.stateless_makespan),
         "warm": bool(res.warm),
+        "cache_hit": bool(res.cache_hit),
         "k": int(res.k),
         "converged": bool(res.converged),
         "eq_exhausted": bool(res.eq_exhausted),

@@ -115,6 +115,57 @@ def _permutations_family(spec: TrafficSpec, t: int, rng: np.random.Generator):
     return D, {"k": k}
 
 
+@register_family("moe_phases")
+def _moe_phases_family(spec: TrafficSpec, t: int, rng: np.random.Generator):
+    """Phase-cycling MoE expert routing: the support-cache workload.
+
+    A router alternates between ``phases`` fixed expert-assignment
+    patterns; period ``t`` replays pattern ``t % phases`` with small
+    multiplicative weight noise (support preserved exactly). Each phase is
+    a sum of ``fanout`` *disjoint* expert-shift permutations (rotations of
+    one random permutation), so consecutive periods share no support — the
+    adjacency warm start always misses — while every recurrence of a phase
+    is an exact support match for the support-pattern cache, host and
+    device alike.
+    """
+    p = spec.params
+    phases = int(p.get("phases", 2))
+    fanout = int(_knob(p, "fanout", t, 4))
+    noise = float(_knob(p, "noise", t, 0.01))
+    phase = t % phases
+    n = spec.n
+    prng = np.random.default_rng(1000 * spec.seed + int(p.get("phase_seed", 0)) + phase)
+    sigma = prng.permutation(n)
+    rows = np.arange(n)
+    D = np.zeros((n, n), dtype=np.float64)
+    for j in prng.choice(n, size=min(fanout, n), replace=False):
+        D[rows, np.roll(sigma, int(j))] += prng.random() + 0.2
+    if noise > 0:
+        D *= 1.0 + noise * rng.standard_normal((n, n))
+        np.maximum(D, 0.0, out=D)
+    return D, {"phase": phase, "phases": phases, "fanout": fanout}
+
+
+@register_family("mixed")
+def _mixed_family(spec: TrafficSpec, t: int, rng: np.random.Generator):
+    """Multi-tenant serving mix: period ``t`` draws one tenant class.
+
+    Cycles through ``classes`` (family names) period by period — the
+    heterogeneous open-loop traffic a shared scheduling control plane
+    sees. Per-class knobs pass through ``params`` unchanged.
+    """
+    from .registry import get_family
+
+    p = spec.params
+    classes = tuple(p.get("classes", ("moe_phases", "permutations", "uniform")))
+    cls = classes[t % len(classes)]
+    out = get_family(cls)(spec.replace(family=cls), t, rng)
+    D, meta = out if isinstance(out, tuple) else (out, {})
+    meta = dict(meta)
+    meta["tenant_class"] = cls
+    return D, meta
+
+
 _DEFAULT_WIRE_BYTES = {
     "all-reduce": 4.0e9,       # DP/FSDP gradient sync per chip per step
     "all-to-all": 1.0e9,       # MoE expert dispatch
@@ -244,6 +295,19 @@ register_scenario(
     TrafficSpec(family="permutations", n=1024, s=4, delta=0.01, periods=2,
                 params={"k": 8}),
     description="1024-port pod-scale smoke (k=8 perms, 2 periods)",
+)
+register_scenario(
+    "moe_phases",
+    TrafficSpec(family="moe_phases", n=64, s=4, delta=0.01, periods=8,
+                params={"phases": 2}),
+    description="Phase-cycling MoE routing — the support-cache workload "
+                "(2 alternating sparse phases, 8 periods)",
+)
+register_scenario(
+    "serve_mixed",
+    TrafficSpec(family="mixed", n=16, s=4, delta=0.01, periods=8),
+    description="Multi-tenant serving mix: moe_phases/permutations/uniform "
+                "classes interleaved — the control-plane load profile",
 )
 register_scenario(
     "collective_ring",

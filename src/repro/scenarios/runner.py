@@ -541,6 +541,7 @@ def _online_host_rows(trace, units, deltas, stateless, options):
         warm_slack=float(options.extra.get("warm_slack", 0.05)),
         merge_aware=bool(options.extra.get("merge_aware", False)),
         do_equalize=bool(options.extra.get("equalize", True)),
+        cache_size=int(options.extra.get("cache_size", 8)),
     )
     rows = []
     for t in range(trace.T):
@@ -592,6 +593,7 @@ def _online_scan_rows(trace, units, deltas, options):
         warm_start=bool(options.extra.get("warm_start", True)),
         warm_prices=bool(options.extra.get("warm_prices", False)),
         warm_slack=float(options.extra.get("warm_slack", 0.05)),
+        cache_size=int(options.extra.get("cache_size", 8)),
     )
     jax.block_until_ready(res.makespan)
     perms = np.asarray(res.schedule.perms)

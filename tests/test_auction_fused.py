@@ -323,3 +323,61 @@ def test_e2e_quality_vs_host_pod_1024():
     )
     assert dev.extras["matcher"] == "auction_fused"
     assert dev.makespan <= 1.15 * host.makespan
+
+
+# ------------------------------------------------- warm-start round counts
+
+
+def test_with_iters_arity_and_legacy_contract():
+    """with_iters appends the round count; the default arity stays 2."""
+    rng = np.random.default_rng(21)
+    W = jnp.asarray(rng.random((24, 24)), jnp.float32)
+    legacy = match_auction_fused(W, use_kernel=False)
+    assert len(legacy) == 2
+    perm, conv, iters = match_auction_fused(
+        W, use_kernel=False, with_iters=True
+    )
+    assert bool(conv) and int(iters) > 0
+    np.testing.assert_array_equal(np.asarray(perm), np.asarray(legacy[0]))
+    # prices + iters together: iters comes after prices.
+    out = match_auction_fused(
+        W, use_kernel=False, with_prices=True, with_iters=True
+    )
+    assert len(out) == 4 and out[2].shape == (24,) and int(out[3]) > 0
+
+
+def test_with_iters_kernel_path_reports_sentinel():
+    """The Pallas kernel keeps its loop counter on-chip → -1 sentinel."""
+    rng = np.random.default_rng(22)
+    W = jnp.asarray(rng.random((16, 16)), jnp.float32)
+    perm, conv, iters = match_auction_fused(
+        W, use_kernel=True, interpret=True, with_iters=True
+    )
+    assert int(iters) == -1
+    assert sorted(np.asarray(perm).tolist()) == list(range(16))
+
+
+def test_warm_prices_converge_in_fewer_rounds_at_same_quality():
+    """Cross-period price reuse: a warm start on a perturbed instance must
+    bid strictly fewer rounds than a cold solve (it enters the ε schedule
+    at the tail) while matching the cold solve's objective."""
+    n = 32
+    rng = np.random.default_rng(23)
+    W1 = rng.random((n, n)).astype(np.float32)
+    out = match_auction_fused(
+        jnp.asarray(W1), use_kernel=False, with_prices=True, with_iters=True
+    )
+    prices = out[2]
+    # Same traffic structure, 1% drift — the serving steady state.
+    W2 = (W1 * (1.0 + 0.01 * rng.standard_normal((n, n)))).astype(np.float32)
+    perm_c, conv_c, it_cold = match_auction_fused(
+        jnp.asarray(W2), use_kernel=False, with_iters=True
+    )
+    perm_w, conv_w, it_warm = match_auction_fused(
+        jnp.asarray(W2), use_kernel=False, prices0=prices, with_iters=True
+    )
+    assert bool(conv_c) and bool(conv_w)
+    assert int(it_warm) < int(it_cold)
+    assert _matched_weight(W2.astype(np.float64), perm_w) >= (
+        _matched_weight(W2.astype(np.float64), perm_c) - 1e-3 * n
+    )

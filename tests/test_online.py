@@ -614,3 +614,54 @@ def test_acceptance_scan_parity_and_speed_vs_per_period_dispatch():
 
     # "at least as fast per period", with CI-noise headroom
     assert scan_s / tr.T <= (loop_s / tr.T) * 1.25, (scan_s, loop_s)
+
+
+# ------------------------------------------- device support-pattern cache
+
+
+def test_online_scan_device_cache_matches_host_semantics():
+    """Phase-cycling traffic: adjacent periods never share a support (so
+    adjacency warm-start can't fire), but period t-2 does — the device
+    support-pattern cache carried in the scan state must serve exactly
+    the periods the host controller's cache serves, and disabling it
+    (cache_size=0) must kill all warm periods."""
+    jax = pytest.importorskip("jax")
+    del jax
+    from repro.core.jaxopt.online_jax import spectra_online_scan
+
+    tr = make_trace("moe_phases", n=16, periods=6, phases=2)
+    s, delta = tr.spec.s, tr.spec.delta
+
+    res, _ = spectra_online_scan(tr.demands, s, delta, cache_size=8)
+    dev_warm = np.asarray(res.warm).astype(bool)
+    dev_hit = np.asarray(res.cache_hit).astype(bool)
+
+    # Host controller, same cache capacity, same trace.
+    opts = SolveOptions(validate=False, compute_lb=False,
+                        extra={"cache_size": 8})
+    state = None
+    host_warm = []
+    for t in range(tr.T):
+        o = SolveOptions(validate=False, compute_lb=False,
+                         extra={"cache_size": 8, "online": state})
+        rep = solve(Problem(tr.demands[t], s, delta),
+                    solver="spectra_online", options=o)
+        state = rep.extras["online_state"]
+        host_warm.append(bool(rep.extras["warm"]))
+
+    # Phases alternate → the first occurrence of each phase is cold, every
+    # revisit is cache-warm. Device and host must agree period-by-period.
+    assert host_warm == [False, False, True, True, True, True]
+    assert dev_warm.tolist() == host_warm
+    # On this trace every device warm period IS a cache hit (adjacency
+    # never matches across alternating phases).
+    assert dev_hit.tolist() == dev_warm.tolist()
+
+    # Cache disabled: no tier left to warm from.
+    res0, _ = spectra_online_scan(tr.demands, s, delta, cache_size=0)
+    assert not np.asarray(res0.warm).any()
+    assert not np.asarray(res0.cache_hit).any()
+    # Quality: cached-decomposition periods stay within the online bound.
+    mks = np.asarray(res.makespan)
+    stateless = np.asarray(res.stateless_makespan)
+    assert (mks <= stateless + 1e-6).all()

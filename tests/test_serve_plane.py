@@ -1,0 +1,433 @@
+"""Serving control plane: admission, cache, metrics, double-buffered loop.
+
+Fast lane:
+  * latency histograms and metrics export (the SLO observables);
+  * token buckets and admission verdicts (ADMIT / DEGRADED / SHED),
+    per-tenant isolation, bounded queue;
+  * the two-tier schedule cache: exact hits return the stored schedule,
+    support hits replay stored permutations onto drifted weights with a
+    coverage guarantee, the quality gate rejects inefficient replays,
+    FIFO capacity eviction;
+  * server mechanics on the host solver: round-robin tenant fairness,
+    degraded dispatch grouping (no EQUALIZE, never cached), shed
+    accounting, cache-integrated serving;
+  * sync/async result identity on the JAX dispatch path;
+  * per-tenant stateful sessions and fair draining.
+
+Slow lane (acceptance, mirrored with headroom by the CI serve-slo gate):
+  * async double-buffering ≥ 1.3× the synchronous loop with install
+    latency calibrated to the measured solve time;
+  * ≥ 70% cache hit rate serving phase-cycling MoE traffic;
+  * under 2× overload the queue stays bounded and SHED verdicts appear.
+"""
+
+import math
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import Problem, SolveOptions, solve
+from repro.serve.admission import (
+    ADMIT,
+    DEGRADED,
+    SHED,
+    AdmissionController,
+    TokenBucket,
+)
+from repro.serve.cache import CacheResult, ScheduleCache
+from repro.serve.loadgen import (
+    Arrival,
+    make_workload,
+    mixed_profile,
+    poisson_arrivals,
+    submit_all,
+    tiny_profile,
+)
+from repro.serve.metrics import STAGES, LatencyHistogram, ServeMetrics
+from repro.serve.server import ScheduleServer
+from repro.serve.sessions import SessionManager, TenantSession
+
+_FAST = SolveOptions(validate=False, compute_lb=False)
+
+
+def _perm_demand(n, rng, k=3):
+    D = np.zeros((n, n))
+    sigma = rng.permutation(n)
+    for j in range(k):
+        D[np.arange(n), np.roll(sigma, j)] = rng.random(n) + 0.2
+    return D
+
+
+# ------------------------------------------------------------------ metrics
+
+
+def test_latency_histogram_percentiles_and_export():
+    h = LatencyHistogram()
+    assert math.isnan(h.percentile(50))
+    for x in [1e-3] * 90 + [0.1] * 10:
+        h.observe(x)
+    assert h.count == 100
+    assert h.percentile(50) == pytest.approx(1e-3, rel=0.35)
+    assert h.percentile(99) == pytest.approx(0.1, rel=0.35)
+    # Observations beyond the bin range clamp, never drop.
+    h.observe(1e-9)
+    h.observe(1e9)
+    assert h.count == 102
+    exp = h.export()
+    assert exp["count"] == 102 and exp["max_s"] == 1e9
+    assert exp["p50_s"] <= exp["p90_s"] <= exp["p99_s"]
+
+
+def test_serve_metrics_counters_and_export():
+    m = ServeMetrics()
+    for v in (ADMIT, ADMIT, DEGRADED, SHED):
+        m.count_verdict(v)
+    with pytest.raises(ValueError):
+        m.count_verdict("MAYBE")
+    m.cache_hit_exact += 2
+    m.cache_hit_support += 1
+    m.cache_miss += 1
+    m.schedules += 4
+    m.observe("device", 0.01)
+    exp = m.export()
+    assert exp["admitted"] == 2 and exp["degraded"] == 1 and exp["shed"] == 1
+    assert exp["cache_hit_rate"] == pytest.approx(0.75)
+    assert exp["schedules_per_sec"] > 0
+    assert set(exp["stages"]) == set(STAGES)
+
+
+# ---------------------------------------------------------------- admission
+
+
+def test_token_bucket_burst_and_refill():
+    b = TokenBucket(rate=10.0, burst=2.0)
+    assert b.try_take(0.0) and b.try_take(0.0)
+    assert not b.try_take(0.0)  # burst exhausted
+    assert b.try_take(0.1)      # 1 token refilled after 100ms
+    assert not b.try_take(0.1)
+    b2 = TokenBucket(rate=1.0, burst=2.0)
+    b2.try_take(0.0), b2.try_take(0.0)
+    assert b2.try_take(100.0)   # refill caps at burst
+    assert b2.try_take(100.0)
+    assert not b2.try_take(100.0)
+
+
+def test_admission_verdicts_and_tenant_isolation():
+    ac = AdmissionController(rate=10.0, burst=2.0, max_queue=4)
+    assert [ac.admit("a", 0, 0.0) for _ in range(3)] == [
+        ADMIT, ADMIT, DEGRADED,
+    ]
+    # Tenant b has its own bucket — a's exhaustion doesn't degrade b.
+    assert ac.admit("b", 0, 0.0) == ADMIT
+    # A full queue sheds regardless of tokens (and burns none).
+    before = ac.bucket("b").tokens
+    assert ac.admit("b", 4, 0.0) == SHED
+    assert ac.bucket("b").tokens == before
+    # Refill restores ADMIT.
+    assert ac.admit("a", 0, 1.0) == ADMIT
+    ac.set_tenant_rate("vip", rate=1000.0, burst=100.0)
+    assert all(ac.admit("vip", 0, 0.0) == ADMIT for _ in range(50))
+
+
+# -------------------------------------------------------------------- cache
+
+
+def test_cache_exact_and_support_tiers():
+    rng = np.random.default_rng(0)
+    D = _perm_demand(8, rng)
+    rep = solve(Problem(D, 4, 0.01), solver="spectra")
+    cache = ScheduleCache(capacity=8)
+    assert cache.lookup(D, 4, 0.01) is None
+    cache.insert(D, rep.schedule, rep.decomposition)
+
+    r1 = cache.lookup(D, 4, 0.01)
+    assert isinstance(r1, CacheResult) and r1.tier == "exact"
+    assert r1.makespan == pytest.approx(rep.makespan)
+
+    # 1% multiplicative drift: same support, new weights → support tier,
+    # and the replayed schedule must still cover the live matrix.
+    D2 = np.maximum(D * (1.0 + 0.01 * rng.standard_normal(D.shape)), 0.0)
+    D2[D == 0] = 0.0
+    r2 = cache.lookup(D2, 4, 0.01)
+    assert r2 is not None and r2.tier == "support"
+    r2.schedule.validate(D2, tol=1e-9 * D2.max())
+    # Replay quality stays near the fresh solve.
+    assert r2.makespan <= 1.1 * rep.makespan
+    assert cache.stats.hits_exact == 1 and cache.stats.hits_support == 1
+    assert cache.stats.misses == 1
+
+
+def test_cache_quality_gate_rejects_overprovisioned_replay():
+    """Same support, adversarially shifted weights: replaying the stored
+    permutations over-provisions past the ratio gate → miss, not a bloated
+    schedule."""
+    # σ1=id and σ3 share cell (0,0); σ2 is disjoint from both.
+    s1 = np.array([0, 1, 2])
+    s2 = np.array([1, 2, 0])
+    s3 = np.array([0, 2, 1])
+    from repro.core.decompose import Decomposition
+    from repro.core.schedule import schedule_lpt
+
+    dec = Decomposition(perms=[s1, s2, s3], alphas=[1.0, 1.0, 1.0])
+    D1 = dec.coverage(3)
+    sched = schedule_lpt(dec, 2, 0.01)
+    cache = ScheduleCache(capacity=4, ratio_slack=0.1)
+    cache.insert(D1, sched, dec)
+
+    # Load the σ2-only cells; replaying σ1/σ3's stored weights is now waste.
+    D2 = np.full((3, 3), 0.0)
+    D2[np.arange(3), s2] = 10.0
+    D2[np.arange(3), s1] = 0.01
+    D2[np.arange(3), s3] = 0.01
+    D2[0, 0] = 0.02  # shared cell keeps the union support identical
+    assert (D2 > 0).tolist() == (D1 > 0).tolist()
+    assert cache.lookup(D2, 2, 0.01) is None
+    assert cache.stats.rejected_quality == 1
+
+
+def test_cache_fifo_capacity_and_update_in_place():
+    rng = np.random.default_rng(5)
+    cache = ScheduleCache(capacity=2)
+    mats = [_perm_demand(6, np.random.default_rng(seed)) for seed in range(3)]
+    reps = [solve(Problem(D, 2, 0.01), solver="spectra") for D in mats]
+    for D, rep in zip(mats[:2], reps[:2]):
+        cache.insert(D, rep.schedule, rep.decomposition)
+    assert len(cache) == 2
+    # Re-inserting an existing key updates in place (no eviction).
+    cache.insert(mats[0], reps[0].schedule, reps[0].decomposition)
+    assert len(cache) == 2
+    assert cache.lookup(mats[0], 2, 0.01) is not None
+    # A third distinct key evicts the oldest (FIFO).
+    cache.insert(mats[2], reps[2].schedule, reps[2].decomposition)
+    assert len(cache) == 2
+    assert cache.lookup(mats[1], 2, 0.01) is not None  # newer key survives
+    del rng
+
+
+# ------------------------------------------------------------------- server
+
+
+def test_server_round_robin_fairness_across_tenants():
+    srv = ScheduleServer(2, 0.01, solver="spectra", options=_FAST,
+                         max_batch=2)
+    rng = np.random.default_rng(1)
+    for _ in range(3):
+        srv.submit("chatty", _perm_demand(6, rng))
+    srv.submit("quiet", _perm_demand(6, rng))
+    batch = srv._next_batch()
+    # One rotation serves each tenant's head before chatty's backlog.
+    assert [r.tenant for r in batch] == ["chatty", "quiet"]
+
+
+def test_server_degraded_grouping_and_cache_exclusion():
+    ac = AdmissionController(rate=0.001, burst=1.0, max_queue=64)
+    cache = ScheduleCache(capacity=8)
+    srv = ScheduleServer(2, 0.01, solver="spectra", options=_FAST,
+                         admission=ac, cache=cache, max_batch=4)
+    rng = np.random.default_rng(2)
+    D = _perm_demand(6, rng)
+    t1, v1 = srv.submit("a", D, now=0.0)
+    t2, v2 = srv.submit("a", D, now=0.0)  # bucket empty → degraded
+    assert (v1, v2) == (ADMIT, DEGRADED)
+    srv.drain()
+    r1, r2 = srv.results[t1], srv.results[t2]
+    assert not r1.degraded and r2.degraded
+    # Degraded dispatch skips EQUALIZE → its schedule can be no better.
+    assert r2.makespan >= r1.makespan - 1e-12
+    # Only the admitted solve was cached; the degraded one never is.
+    assert cache.stats.inserts == 1
+    # Degraded requests bypass the cache lookup too.
+    assert cache.stats.hits == 0
+
+
+def test_server_shed_bookkeeping_and_bounded_queue():
+    ac = AdmissionController(rate=1000.0, burst=1000.0, max_queue=3)
+    srv = ScheduleServer(2, 0.01, solver="spectra", options=_FAST,
+                         admission=ac)
+    rng = np.random.default_rng(3)
+    verdicts = [
+        srv.submit("a", _perm_demand(6, rng), now=0.0)[1] for _ in range(8)
+    ]
+    assert verdicts.count(SHED) == 5 and len(srv) == 3
+    srv.drain()
+    assert len(srv.results) == 3 and len(srv.shed_tickets) == 5
+    assert srv.metrics.shed == 5
+    assert set(srv.results) | set(srv.shed_tickets) == set(range(8))
+
+
+def test_server_serves_repeats_from_cache():
+    cache = ScheduleCache(capacity=8)
+    srv = ScheduleServer(2, 0.01, solver="spectra", options=_FAST,
+                         cache=cache)
+    D = _perm_demand(6, np.random.default_rng(4))
+    t1, _ = srv.submit("a", D)
+    srv.drain()
+    t2, _ = srv.submit("a", D)
+    srv.drain()
+    assert srv.results[t1].source == "device"
+    assert srv.results[t2].source == "cache:exact"
+    assert srv.results[t2].makespan == pytest.approx(
+        srv.results[t1].makespan
+    )
+    assert srv.metrics.cache_hit_exact == 1
+
+
+def test_sync_async_identical_results_on_jax_path():
+    pytest.importorskip("jax")
+    wl = make_workload(tiny_profile(n=8, rate=30.0), duration=0.3, seed=7,
+                       s=2, delta=0.01)
+    assert wl, "profile produced no arrivals"
+    outs = {}
+    for mode in ("sync", "async"):
+        srv = ScheduleServer(2, 0.01, mode=mode, solver="spectra_jax",
+                             options=_FAST, max_batch=4)
+        assert srv.mode == mode  # jax path available → async honored
+        submit_all(srv, wl)
+        res = srv.drain()
+        outs[mode] = sorted(
+            (r.ticket, round(r.makespan, 5)) for r in res.values()
+        )
+    assert outs["sync"] == outs["async"]
+
+
+def test_server_non_jax_solver_falls_back_to_sync():
+    srv = ScheduleServer(2, 0.01, mode="async", solver="spectra",
+                         options=_FAST)
+    assert srv.mode == "sync"
+    with pytest.raises(ValueError):
+        ScheduleServer(2, 0.01, mode="overlapped")
+    with pytest.raises(ValueError):
+        srv.submit("a", np.zeros((3, 4)))
+
+
+# ----------------------------------------------------------------- loadgen
+
+
+def test_poisson_arrivals_and_workload_shape():
+    rng = np.random.default_rng(0)
+    times = poisson_arrivals(100.0, 2.0, rng)
+    assert (np.diff(times) > 0).all() and times[-1] < 2.0
+    assert len(times) == pytest.approx(200, rel=0.35)
+    wl = make_workload(mixed_profile(), duration=0.5, seed=1)
+    assert all(isinstance(a, Arrival) for a in wl)
+    assert all(a.t <= b.t for a, b in zip(wl, wl[1:]))
+    shapes = {a.D.shape for a in wl}
+    assert shapes == {(8, 8), (16, 16)}  # ragged tenants
+    # Same seed → identical workload (deterministic benches).
+    wl2 = make_workload(mixed_profile(), duration=0.5, seed=1)
+    assert [(a.t, a.tenant) for a in wl] == [(a.t, a.tenant) for a in wl2]
+
+
+# ---------------------------------------------------------------- sessions
+
+
+def test_tenant_sessions_round_robin_and_stats():
+    mgr = SessionManager(2, 0.01, solver="spectra_online")
+    rng = np.random.default_rng(6)
+    D = _perm_demand(8, rng)
+    for t in range(3):
+        mgr.submit("a", D * (1.0 + 0.001 * t))
+    mgr.submit("b", _perm_demand(8, rng))
+    assert mgr.backlog == 4
+    first = mgr.drain_round()
+    assert [t for t, _ in first] == ["a", "b"]  # one period each, fair
+    rest = mgr.drain()
+    assert mgr.backlog == 0 and len(rest) == 2
+    st = mgr.stats()
+    assert st["a"]["periods"] == 3 and st["b"]["periods"] == 1
+    # Identical support period-over-period → warm reuse for tenant a.
+    assert st["a"]["warm"] >= 1
+    assert isinstance(mgr.session("a"), TenantSession)
+    # Sessions carry state: later periods pay less δ than stateless.
+    reps = mgr.sessions["a"].reports
+    assert all(r.extras["online"] for r in reps)
+
+
+# -------------------------------------------------------- slow acceptance
+
+
+@pytest.mark.slow
+def test_async_double_buffering_speedup():
+    """With install latency calibrated to the measured device solve time,
+    the double-buffered loop must beat the synchronous loop ≥ 1.3×
+    (ideal is ~2×: cycle max(S, L) vs S + L with L ≈ S)."""
+    pytest.importorskip("jax")
+    from repro.api.jax_backend import dispatch_many_jax
+
+    n, B, batches = 16, 4, 4
+    rng = np.random.default_rng(0)
+    mats = [_perm_demand(n, rng, k=4) for _ in range(B * batches)]
+
+    # Warm the compile cache at exactly the serving shape, then measure
+    # the steady-state per-batch solve time.
+    warm = dispatch_many_jax(np.stack(mats[:B]), 4, 0.01, _FAST)
+    warm.collect()
+    t0 = time.perf_counter()
+    dispatch_many_jax(np.stack(mats[:B]), 4, 0.01, _FAST).collect()
+    solve_s = time.perf_counter() - t0
+    install = max(solve_s, 0.01)
+
+    def run(mode):
+        srv = ScheduleServer(
+            4, 0.01, mode=mode, solver="spectra_jax", options=_FAST,
+            install_latency_s=install, max_batch=B,
+        )
+        for i, D in enumerate(mats):
+            srv.submit(f"t{i % 2}", D)
+        t0 = time.perf_counter()
+        srv.drain()
+        dt = time.perf_counter() - t0
+        assert len(srv.results) == len(mats)
+        return dt
+
+    sync_s = run("sync")
+    async_s = run("async")
+    assert async_s * 1.3 <= sync_s, (
+        f"double-buffering speedup {sync_s / async_s:.2f}x < 1.3x "
+        f"(solve {solve_s * 1e3:.1f}ms, install {install * 1e3:.1f}ms)"
+    )
+
+
+@pytest.mark.slow
+def test_cache_hit_rate_on_phase_cycling_traffic():
+    """Serving the phase-cycling MoE profile, ≥ 70% of admitted requests
+    must come from the schedule cache (exact or support tier)."""
+    pytest.importorskip("jax")
+    wl = make_workload(tiny_profile(n=8, rate=60.0), duration=0.6, seed=3)
+    cache = ScheduleCache(capacity=32)
+    srv = ScheduleServer(4, 0.01, mode="async", solver="spectra_jax",
+                         options=_FAST, cache=cache, max_batch=4)
+    submit_all(srv, wl)
+    srv.drain()
+    m = srv.metrics
+    assert m.schedules == len(wl)
+    assert m.cache_hit_rate >= 0.70, m.export()
+    # Cached schedules really are schedules: spot-check coverage.
+    hits = [r for r in srv.results.values() if r.source.startswith("cache")]
+    assert hits and all(np.isfinite(r.makespan) for r in hits)
+
+
+@pytest.mark.slow
+def test_overload_sheds_and_keeps_queue_bounded():
+    """2× overload: offered rate double the profile the queue is sized
+    for. The queue must never exceed max_queue and SHED must appear."""
+    pytest.importorskip("jax")
+    wl = make_workload(tiny_profile(n=8, rate=120.0), duration=0.5, seed=5)
+    ac = AdmissionController(rate=1000.0, burst=1000.0, max_queue=8)
+    srv = ScheduleServer(4, 0.01, mode="async", solver="spectra_jax",
+                         options=_FAST, admission=ac, max_batch=4)
+    max_depth = 0
+    for i, a in enumerate(wl):
+        srv.submit(a.tenant, a.D, now=a.t)
+        max_depth = max(max_depth, len(srv))
+        # Overloaded serving: one cycle (≤ max_batch schedules) per 12
+        # arrivals — offered load exceeds drain capacity 2-3×.
+        if i % 12 == 11:
+            srv.step()
+    srv.drain()
+    assert max_depth <= 8
+    assert srv.metrics.shed > 0
+    assert len(srv.results) + len(srv.shed_tickets) == len(wl)
+    # Every served request still produced a real schedule.
+    assert all(np.isfinite(r.makespan) for r in srv.results.values())

@@ -189,3 +189,62 @@ def test_problem_input_validation():
         Problem(np.zeros((3, 3)), 0, 0.01)
     with pytest.raises(ValueError):
         Problem(np.zeros((3, 3)), 2, -0.1)
+
+
+# ----------------------------------------------- async dispatch / collect
+
+
+def test_dispatch_many_returns_before_collect_and_matches_sync():
+    """The dispatch/collect split: dispatch returns a PendingBatch without
+    a device barrier; collect() is idempotent and yields exactly the
+    synchronous solve_many_jax reports."""
+    jax = pytest.importorskip("jax")
+    del jax
+    from repro.api.jax_backend import dispatch_many_jax, solve_many_jax
+
+    rng = np.random.default_rng(3)
+    Ds = np.stack([doubly_substochastic(rng, 8) for _ in range(4)])
+    opts = SolveOptions(validate=True)
+    pb = dispatch_many_jax(Ds, 2, 0.01, opts)
+    assert len(pb) == 4
+    assert isinstance(pb.ready, bool)  # non-blocking probe, any phase
+    reports = pb.collect()
+    assert pb.ready  # collected → concrete
+    assert reports is pb.collect()  # idempotent, same object
+    sync = solve_many_jax(Ds, 2, 0.01, opts)
+    for a, b in zip(reports, sync):
+        assert a.makespan == pytest.approx(b.makespan, rel=1e-6)
+        assert a.extras["batched"] and a.extras["batch_size"] == 4
+        assert a.validated
+
+
+def test_solver_service_flush_midbatch_exception_requeues_all(monkeypatch):
+    """A failure *inside* the batched solve (device error, OOM, a poisoned
+    group) must leave every ticket queued — none delivered, none lost —
+    and the very next flush must drain them all."""
+    from repro.serve import engine as serve_engine
+    from repro.serve.engine import SolverService
+
+    rng = np.random.default_rng(12)
+    svc = SolverService(s=2, delta=0.01, solver="spectra")
+    tickets = [svc.submit(doubly_substochastic(rng, 6)) for _ in range(3)]
+
+    calls = {"n": 0}
+
+    def boom(*args, **kwargs):
+        calls["n"] += 1
+        raise RuntimeError("mid-batch device failure")
+
+    monkeypatch.setattr(serve_engine, "solve_many", boom)
+    with pytest.raises(RuntimeError, match="mid-batch"):
+        svc.flush()
+    assert calls["n"] == 1
+    assert len(svc) == 3  # every ticket survived, in order
+    assert [t for t, _ in svc._queue] == tickets
+
+    monkeypatch.undo()
+    reports = svc.flush()
+    assert set(reports) == set(tickets)
+    assert len(svc) == 0
+    for rep in reports.values():
+        assert np.isfinite(rep.makespan)
