@@ -1,0 +1,86 @@
+"""Shared benchmark-artifact writer: one schema for every ``BENCH_*.json``.
+
+Every perf benchmark writes its results through ``write_artifact`` so the
+files under ``benchmarks/out/`` are machine-comparable across commits:
+the same envelope (schema version, benchmark name, git SHA, timestamp,
+workload tag) around the benchmark's own metrics payload. ``git_sha`` and
+``timestamp`` are computed by the caller (see ``git_sha()`` /
+``now_iso()`` — callers in tests pass fixed values for reproducible
+round-trips).
+"""
+
+from __future__ import annotations
+
+import json
+import subprocess
+from datetime import datetime, timezone
+from pathlib import Path
+from typing import Any
+
+from .common import OUT_DIR
+
+SCHEMA = "repro-bench/v1"
+
+__all__ = ["SCHEMA", "git_sha", "now_iso", "read_artifact", "write_artifact"]
+
+
+def git_sha(cwd: str | Path | None = None) -> str | None:
+    """Current commit SHA, or None outside a git checkout."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=cwd or Path(__file__).resolve().parent,
+            capture_output=True,
+            text=True,
+            timeout=10,
+        )
+    except OSError:  # pragma: no cover - git missing
+        return None
+    sha = out.stdout.strip()
+    return sha if out.returncode == 0 and sha else None
+
+
+def now_iso() -> str:
+    """UTC timestamp in ISO-8601 (the envelope's ``timestamp`` format)."""
+    return datetime.now(timezone.utc).isoformat(timespec="seconds")
+
+
+def write_artifact(
+    name: str,
+    metrics: dict[str, Any],
+    *,
+    git_sha: str | None,
+    timestamp: str,
+    workload: str | None = None,
+    out_dir: Path | None = None,
+) -> Path:
+    """Write ``BENCH_<name>.json`` in the shared envelope; returns the path.
+
+    ``metrics`` is the benchmark's own payload (rows, gates, whatever —
+    must be JSON-serializable). ``git_sha``/``timestamp`` are passed in
+    so the writer itself stays deterministic and testable.
+    """
+    out_dir = Path(out_dir) if out_dir is not None else OUT_DIR
+    out_dir.mkdir(parents=True, exist_ok=True)
+    path = out_dir / f"BENCH_{name}.json"
+    doc = {
+        "schema": SCHEMA,
+        "name": name,
+        "git_sha": git_sha,
+        "timestamp": timestamp,
+        "workload": workload,
+        "metrics": metrics,
+    }
+    path.write_text(json.dumps(doc, indent=2))
+    return path
+
+
+def read_artifact(path: str | Path) -> dict[str, Any]:
+    """Load one artifact, checking the schema tag."""
+    doc = json.loads(Path(path).read_text())
+    if doc.get("schema") != SCHEMA:
+        raise ValueError(
+            f"{path}: unknown benchmark artifact schema {doc.get('schema')!r}"
+            f" (expected {SCHEMA!r})"
+        )
+    return doc

@@ -25,13 +25,12 @@ Likewise ``auction`` is dropped at n=1024 unless ``--check`` needs it —
 from __future__ import annotations
 
 import argparse
-import json
 import sys
 import time
 
 import numpy as np
 
-from .common import OUT_DIR
+from .artifact import git_sha, now_iso, write_artifact
 
 SIZES = (100, 256, 512, 1024)
 FAST_SIZES = (100, 256)
@@ -145,10 +144,13 @@ def main(argv=None) -> int:
 
     sizes = FAST_SIZES if args.fast else SIZES
     rows = run(sizes, args.reps)
-    OUT_DIR.mkdir(parents=True, exist_ok=True)
-    out = OUT_DIR / "BENCH_matching.json"
-    out.write_text(json.dumps({"workload": "perm16+M-bonus", "rows": rows},
-                              indent=2))
+    out = write_artifact(
+        "matching",
+        {"rows": rows},
+        git_sha=git_sha(),
+        timestamp=now_iso(),
+        workload="perm16+M-bonus",
+    )
     print(f"wrote {out}")
     if args.check:
         failures = check(rows)

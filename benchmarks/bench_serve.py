@@ -23,13 +23,12 @@ Usage:
 from __future__ import annotations
 
 import argparse
-import json
 import sys
 import time
 
 import numpy as np
 
-from .common import OUT_DIR
+from .artifact import git_sha, now_iso, write_artifact
 
 # --- CI gates (headroom vs the slow-test assertions, which are stricter) --
 SPEEDUP_GATE = 1.2       # async vs sync drain (slow test asserts 1.3)
@@ -259,10 +258,13 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     rows = run(fast=args.fast)
-    OUT_DIR.mkdir(parents=True, exist_ok=True)
-    out = OUT_DIR / "BENCH_serve.json"
-    out.write_text(json.dumps({"workload": "serve-control-plane",
-                               "rows": rows}, indent=2))
+    out = write_artifact(
+        "serve",
+        {"rows": rows},
+        git_sha=git_sha(),
+        timestamp=now_iso(),
+        workload="serve-control-plane",
+    )
     print(f"wrote {out}")
     if args.check:
         failures = check(rows)

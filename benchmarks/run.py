@@ -16,6 +16,11 @@ comes out worse than its stateless baseline (the CI online gate).
 ``--flowsim`` replays each trace at the flow level for both ``--solver``
 and the ``rotor_vlb`` baseline, prints FCT percentiles, and exits 1 if any
 period fails bytes conservation (the CI flowsim gate).
+``--obs`` turns on the span tracer for the whole run, validates the
+makespan-attribution identity (``transmission + δ paid + idle ≡
+s·makespan``), per-switch utilization ∈ [0, 1], and LB gap ≥ 0 on every
+scenario, writes the Chrome trace to ``benchmarks/out/TRACE_scenarios.json``,
+re-parses it, and exits 1 on any violation (the CI obs-smoke gate).
 ``--fast`` shrinks scenario mode to tiny (n=8, T=3) variants — the
 smoke-lane configuration.
 
@@ -31,7 +36,7 @@ import sys
 
 def _run_scenarios(
     names: list[str], solver: str, periods: int | None, fast: bool,
-    online: bool = False, flowsim: bool = False,
+    online: bool = False, flowsim: bool = False, obs: bool = False,
 ) -> None:
     from repro.scenarios import list_scenarios, run_scenario
 
@@ -47,21 +52,115 @@ def _run_scenarios(
         overrides.update(n=8, periods=3)
     if periods is not None:
         overrides["periods"] = periods
+    if obs:
+        from repro.obs import get_tracer
+
+        get_tracer().enable()
     print("name,us_per_call,derived")
     failures = 0
     for name in names:
         for sv in solvers:
             failures += _run_one_scenario(
                 run_scenario, name, sv, overrides,
-                online=online, flowsim=flowsim,
+                online=online, flowsim=flowsim, obs=obs,
             )
+    if obs:
+        failures += _check_trace(solver)
     if failures:  # scenario mode gates CI — a broken scenario must fail the job
         sys.exit(1)
 
 
+def _check_obs(rep, name: str, solver: str) -> int:
+    """Attribution gate for one report; prints its CSV row; return #failures.
+
+    Validates (a) the identity ``transmission + δ paid + idle ≡ s·makespan``
+    on every period of both passes (``attribute_scenario`` raises), (b)
+    per-switch utilization ∈ [0, 1], and (c) LB gap ≥ 0 — all within the
+    backend tolerance.
+    """
+    from repro.obs import attribute_scenario
+
+    try:
+        att = attribute_scenario(rep)
+        att.check()
+    except (AssertionError, ValueError) as exc:
+        print(f"obs_{name}_{solver},nan,ERROR:{type(exc).__name__}:{exc}")
+        return 1
+    failures = 0
+    agg = att.summary()
+    for t, table in enumerate(att.tables + att.online_tables):
+        a = table.attribution
+        utils = table.utilization
+        if len(utils) and (utils.min() < -att.tol or utils.max() > 1 + att.tol):
+            print(f"obs_{name}_{solver},nan,"
+                  f"ERROR:period {t} utilization outside [0,1]: "
+                  f"[{utils.min():.6f}, {utils.max():.6f}]")
+            failures += 1
+        # Stateless makespans can't beat the §IV bound; online credit-aware
+        # makespans can, by at most the per-switch δ the reuse avoided (the
+        # bound charges δ for every configuration, reused or not).
+        floor = -(a.delta_avoided / a.s + att.tol * max(1.0, a.makespan))
+        gap = a.lb_gap
+        if gap == gap and gap < floor:  # finite and below the floor
+            print(f"obs_{name}_{solver},nan,"
+                  f"ERROR:period {t} makespan beats the lower bound: "
+                  f"gap {gap:.6g} < floor {floor:.6g}")
+            failures += 1
+    derived = (
+        f"residual={agg['max_identity_residual']:.3g};"
+        f"tx={agg['transmission_share']:.3f};d={agg['delta_share']:.3f};"
+        f"idle={agg['idle_share']:.3f};util_min={agg['util_min']:.3f}"
+    )
+    if att.online_tables:
+        derived += (
+            f";online_reuse={agg['online_reuse_count']}"
+            f";online_d_avoided={agg['online_delta_avoided']:.4f}"
+        )
+    if not failures:
+        print(f"obs_{name}_{solver},0,{derived}")
+    return failures
+
+
+def _check_trace(solver: str) -> int:
+    """Export + re-parse the Chrome trace; gate on the expected span names."""
+    import json
+
+    from repro.obs import get_tracer
+
+    from .common import OUT_DIR
+
+    tracer = get_tracer()
+    path = tracer.save(OUT_DIR / "TRACE_scenarios.json")
+    failures = 0
+    try:
+        doc = json.loads(path.read_text())
+        events = doc["traceEvents"]
+        assert isinstance(events, list) and events, "no trace events"
+        for e in events:
+            assert e["ph"] in ("X", "i", "C"), f"bad phase {e['ph']!r}"
+            assert e["ts"] >= 0, f"negative timestamp in {e['name']!r}"
+            if e["ph"] == "X":
+                assert e["dur"] >= 0, f"negative duration in {e['name']!r}"
+    except (AssertionError, KeyError, ValueError) as exc:
+        print(f"obs_trace,nan,ERROR:{type(exc).__name__}:{exc}")
+        return 1
+    names = {s.name for s in tracer.spans()}
+    want = {"solve_many", "install"}
+    if solver == "spectra":  # host pipeline: per-stage spans must appear
+        want |= {"decompose", "schedule", "equalize", "matcher"}
+    missing = want - names
+    if missing:
+        print(f"obs_trace,nan,ERROR:missing spans {sorted(missing)}")
+        failures += 1
+    else:
+        print(f"obs_trace,0,events={len(events)};spans={len(tracer.spans())};"
+              f"path={path}")
+    return failures
+
+
 def _run_one_scenario(
     run_scenario, name: str, solver: str, overrides: dict,
-    *, online: bool, flowsim: bool,
+    *, online: bool, flowsim: bool, obs: bool = False,
 ) -> int:
     """Run one (scenario, solver) pair; print its CSV row; return #failures."""
     try:
@@ -72,6 +171,8 @@ def _run_one_scenario(
         print(f"scenario_{name}_{solver},nan,ERROR:{type(exc).__name__}:{exc}")
         return 1
     failures = 0
+    if obs:
+        failures += _check_obs(rep, name, solver)
     s = rep.summary()
     derived = (
         f"T={s['periods']};n={s['n']};mean_mk={s['mean_makespan']:.4f};"
@@ -175,13 +276,20 @@ def main(argv: list[str] | None = None) -> None:
                     help="scenario mode: flow-level replay of --solver and "
                          "the rotor_vlb baseline; exit 1 if any period "
                          "fails bytes conservation")
+    ap.add_argument("--obs", action="store_true",
+                    help="scenario mode: trace the run, validate the "
+                         "makespan-attribution identity / utilization / LB "
+                         "gap per scenario, write and re-parse the Chrome "
+                         "trace; exit 1 on any violation")
     args = ap.parse_args(argv)
 
+    if args.obs and not args.scenario:
+        ap.error("--obs requires --scenario")
     if args.fast:
         os.environ["REPRO_BENCH_FAST"] = "1"
     if args.scenario:
         _run_scenarios(args.scenario, args.solver, args.periods, args.fast,
-                       online=args.online, flowsim=args.flowsim)
+                       online=args.online, flowsim=args.flowsim, obs=args.obs)
     else:
         _run_figures()
 

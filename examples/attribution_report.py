@@ -1,0 +1,64 @@
+"""Where does the makespan go? Attribution for GPT vs MoE traffic.
+
+The headline metric — "the schedule is 1.07× above the §IV bound" — says
+nothing about *why*. The obs layer answers that with the exact accounting
+identity
+
+    transmission + δ paid + idle  ≡  s · makespan
+
+per period, the matching LB-gap decomposition (imbalance vs δ vs idle),
+the per-switch occupancy timeline, and — for the online controller — the
+δ the reuse credit avoided outright.
+
+    PYTHONPATH=src python examples/attribution_report.py
+"""
+
+from repro.obs import attribute_scenario, timeline_table
+from repro.scenarios import run_scenario
+
+N, T = 32, 6
+
+
+def report(name: str) -> None:
+    rep = run_scenario(name, solver="spectra", n=N, periods=T)
+    att = attribute_scenario(rep)
+    att.check()  # the identity holds on every period or this raises
+    agg = att.summary()
+    print(f"\n=== {name}: n={N}, T={T}, s={rep.spec.s} ===")
+    print(f"switch-time split: transmission={agg['transmission_share']:.1%} "
+          f"δ={agg['delta_share']:.1%} idle={agg['idle_share']:.1%} "
+          f"(identity residual ≤ {agg['max_identity_residual']:.2e})")
+    print(f"LB gap {agg['total_lb_gap']:.4f} = "
+          f"imbalance {agg['gap_from_transmission']:+.4f} "
+          f"+ δ {agg['gap_from_delta']:.4f} "
+          f"+ idle {agg['gap_from_idle']:.4f}")
+    for t, table in enumerate(att.tables):
+        a = table.attribution
+        spread = max(r["spread"] for r in table.per_round())
+        print(f"  period {t}: makespan={a.makespan:.4f} "
+              f"tx={a.transmission_share:.1%} δ={a.delta_share:.1%} "
+              f"idle={a.idle_share:.1%} worst round spread={spread:.4f}")
+
+    # The time-expanded view of one period: per-switch occupancy strips.
+    print(f"\nperiod 0 switch timeline ({name}):")
+    print(timeline_table(rep.reports[0]).render_ascii(width=64))
+
+
+for name in ("gpt", "moe"):
+    report(name)
+
+# The online controller's reuse credit shows up as δ *avoided*: switches
+# whose installed permutation matches the next period's serve their first
+# configuration δ-free, so the online makespan can even dip below the
+# δ-inclusive §IV bound.
+print("\n=== gpt, online controller: the δ-avoided credit ===")
+rep = run_scenario("gpt", solver="spectra", n=N, periods=T, online=True)
+att = attribute_scenario(rep)
+att.check()
+agg = att.summary()
+print(f"stateless: δ paid={agg['delta_paid']:.4f} over {T} periods")
+print(f"online:    δ paid={agg['online_delta_paid']:.4f}, "
+      f"δ avoided={agg['online_delta_avoided']:.4f} "
+      f"({agg['online_reuse_count']} reused switch-periods)")
+print(f"online makespan total {agg['online_total_makespan']:.4f} vs "
+      f"stateless {agg['total_makespan']:.4f}")

@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from ..obs.trace import get_tracer
 from .problem import Problem, SolveOptions, SolveReport
 from .registry import solve
 
@@ -84,24 +85,42 @@ def solve_many(
     if not mats:
         return []
     deltas = _as_deltas(delta, len(mats))
+    tracer = get_tracer()
     if solver == "spectra_jax":
         try:
             from .jax_backend import solve_many_jax
         except Exception:  # pragma: no cover - jax missing
             pass
         else:
-            out: list[SolveReport | None] = [None] * len(mats)
-            for idxs in shape_buckets(mats).values():
-                reports = solve_many_jax(
-                    np.stack([mats[i] for i in idxs]),
-                    s,
-                    deltas[idxs],
-                    options,
-                )
-                for i, rep in zip(idxs, reports):
-                    out[i] = rep
-            return out  # type: ignore[return-value]
+            buckets = shape_buckets(mats)
+            with tracer.span(
+                "solve_many",
+                {"B": len(mats), "solver": solver, "buckets": len(buckets)}
+                if tracer.enabled
+                else None,
+            ):
+                out: list[SolveReport | None] = [None] * len(mats)
+                for shape, idxs in buckets.items():
+                    with tracer.span(
+                        "bucket",
+                        {"shape": list(shape), "count": len(idxs)}
+                        if tracer.enabled
+                        else None,
+                    ):
+                        reports = solve_many_jax(
+                            np.stack([mats[i] for i in idxs]),
+                            s,
+                            deltas[idxs],
+                            options,
+                        )
+                    for i, rep in zip(idxs, reports):
+                        out[i] = rep
+                return out  # type: ignore[return-value]
     work = [(D, s, float(d), solver, options) for D, d in zip(mats, deltas)]
+    loop_span = tracer.span(
+        "solve_many",
+        {"B": len(work), "solver": solver} if tracer.enabled else None,
+    )
     if processes and processes > 1 and len(work) > 1:
         import multiprocessing as mp
         import sys
@@ -117,6 +136,9 @@ def solve_many(
             method = "forkserver"
         else:
             method = "spawn"
-        with mp.get_context(method).Pool(min(processes, len(work))) as pool:
+        with loop_span, mp.get_context(method).Pool(
+            min(processes, len(work))
+        ) as pool:
             return pool.map(_solve_one, work)
-    return [_solve_one(w) for w in work]
+    with loop_span:
+        return [_solve_one(w) for w in work]

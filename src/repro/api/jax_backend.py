@@ -34,6 +34,7 @@ from ..core.equalize import equalize
 from ..core.jaxopt.e2e import E2EResult, spectra_jax_e2e, spectra_jax_e2e_many
 from ..core.schedule_ir import DeviceSchedule, LazySchedule, ir_to_schedule
 from ..kernels.backend import resolve_use_kernel
+from ..obs.trace import get_tracer
 from .problem import Problem, SolveOptions, SolveReport, finish_report
 
 
@@ -277,19 +278,24 @@ class PendingBatch:
         accounting spans dispatch → collection (the wall-clock the device
         work occupied, whether or not the host overlapped it)."""
         if self._reports is None:
-            batch = _HostBatch(self._res, self._deltas, **self._kwargs)
-            device_s = time.perf_counter() - self._t0
-            B = len(self)
-            self._reports = [
-                batch.report(
-                    b,
-                    Problem(self._mats[b], self._s, float(self._deltas[b])),
-                    self._options,
-                    device_s / B,
-                    extras={"batched": True, "batch_size": B, "fused": True},
-                )
-                for b in range(B)
-            ]
+            tracer = get_tracer()
+            with tracer.span(
+                "jax.collect",
+                {"B": len(self)} if tracer.enabled else None,
+            ):
+                batch = _HostBatch(self._res, self._deltas, **self._kwargs)
+                device_s = time.perf_counter() - self._t0
+                B = len(self)
+                self._reports = [
+                    batch.report(
+                        b,
+                        Problem(self._mats[b], self._s, float(self._deltas[b])),
+                        self._options,
+                        device_s / B,
+                        extras={"batched": True, "batch_size": B, "fused": True},
+                    )
+                    for b in range(B)
+                ]
         return self._reports
 
 
@@ -310,10 +316,21 @@ def dispatch_many_jax(
     B = mats.shape[0]
     deltas = np.broadcast_to(np.asarray(delta, dtype=np.float64), (B,))
     kwargs = _e2e_kwargs(options, int(mats.shape[-1]))
+    tracer = get_tracer()
     t0 = time.perf_counter()
-    res = spectra_jax_e2e_many(
-        mats.astype(np.float32), s, deltas.astype(np.float32), **kwargs
-    )
+    with tracer.span(
+        "jax.dispatch",
+        {"B": B, "n": int(mats.shape[-1]), "s": int(s)}
+        if tracer.enabled
+        else None,
+    ):
+        res = spectra_jax_e2e_many(
+            mats.astype(np.float32), s, deltas.astype(np.float32), **kwargs
+        )
+        if tracer.enabled and tracer.device_sync:
+            # Opt-in: land device time inside the span that launched it
+            # (serializes the async pipeline — tracing-only behavior).
+            jax.block_until_ready(res.makespan)
     return PendingBatch(res, mats, s, deltas, options, kwargs, t0)
 
 

@@ -24,6 +24,7 @@ from ..core.decompose import Decomposition, decompose
 from ..core.equalize import equalize
 from ..core.improved import local_search, schedule_wrap
 from ..core.schedule import ParallelSchedule, schedule_lpt
+from ..obs.trace import get_tracer
 from .problem import Problem, SolveOptions, SolveReport, finish_report
 
 # Stage signatures. Every stage sees the Problem so stage functions can use
@@ -159,10 +160,20 @@ class Pipeline:
         dec_fn = _lookup("decompose", self.decompose)
         sched_fn = _lookup("schedule", self.schedule)
         eq_fn = _lookup("equalize", self.equalize)
+        tracer = get_tracer()
         t0 = time.perf_counter()
-        dec = dec_fn(problem, **dict(self.decompose_kwargs))
-        sched = sched_fn(dec, problem, **dict(self.schedule_kwargs))
-        sched = eq_fn(sched, problem, **dict(self.equalize_kwargs))
+        with tracer.span(
+            "decompose", {"impl": self.decompose} if tracer.enabled else None
+        ):
+            dec = dec_fn(problem, **dict(self.decompose_kwargs))
+        with tracer.span(
+            "schedule", {"impl": self.schedule} if tracer.enabled else None
+        ):
+            sched = sched_fn(dec, problem, **dict(self.schedule_kwargs))
+        with tracer.span(
+            "equalize", {"impl": self.equalize} if tracer.enabled else None
+        ):
+            sched = eq_fn(sched, problem, **dict(self.equalize_kwargs))
         runtime = time.perf_counter() - t0
         return finish_report(
             solver=solver_name or self.describe(),

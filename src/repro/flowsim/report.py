@@ -189,6 +189,23 @@ class FlowSimReport:
                 float(self.utilization.mean()) if len(self.utilization) else 0.0
             ),
             "delta_overhead": self.delta_overhead,
+            # Switch-time attribution shares (see repro.obs.timeline_table):
+            # serve is util_mean, δ is delta_share, the rest of the horizon
+            # is idle — the three sum to 1 per switch by construction.
+            "delta_share": (
+                float(self.delta_fraction.mean())
+                if len(self.delta_fraction)
+                else 0.0
+            ),
+            "idle_share": (
+                float(
+                    np.clip(
+                        1.0 - self.utilization - self.delta_fraction, 0.0, 1.0
+                    ).mean()
+                )
+                if len(self.utilization)
+                else 0.0
+            ),
             "indirect_frac": self.indirect_fraction,
             "conserved": self.conserved,
             "residual": self.residual,

@@ -17,6 +17,7 @@ from typing import Any
 import numpy as np
 
 from ..api import SolveOptions, SolveReport, solve_many
+from ..obs.trace import get_tracer
 from .registry import Scenario, get_scenario
 from .spec import DemandTrace, TrafficSpec
 
@@ -109,6 +110,24 @@ class ScenarioReport:
         finite = r[np.isfinite(r)]
         return float(finite.max()) if len(finite) else float("nan")
 
+    def warning_counters(self):
+        """Solver warnings across all periods, tallied as obs ``Counters``
+        (``matcher_budget_exhausted`` / ``equalize_headroom_exhausted``)."""
+        from ..obs.metrics import warning_counts
+
+        return warning_counts(self.reports)
+
+    def attribution_summary(self, tol: float | None = None) -> dict[str, Any]:
+        """Makespan attribution over the whole trace: where the switch-time
+        budget went (serve / δ paid / idle shares) and the exact LB-gap
+        decomposition, with the identity checked on every period. Expands
+        every period's timeline — materializes lazy device schedules."""
+        from ..obs.timeline_table import attribute_scenario
+
+        att = attribute_scenario(self, tol=tol)
+        att.check()
+        return att.summary()
+
     @property
     def flowsim_reports(self) -> list:
         """Per-period FlowSimReports, trace order (empty when flowsim off)."""
@@ -151,6 +170,14 @@ class ScenarioReport:
                 np.mean([f.utilization.mean() for f in fs])
             ),
             "delta_overhead": float(np.mean([f.delta_overhead for f in fs])),
+            # Mean per-period switch-time attribution shares (see
+            # repro.obs.timeline_table): serve + δ + idle = 1 per switch.
+            "delta_share": float(
+                np.mean([f.summary()["delta_share"] for f in fs])
+            ),
+            "idle_share": float(
+                np.mean([f.summary()["idle_share"] for f in fs])
+            ),
             "indirect_frac": float(
                 np.mean([f.indirect_fraction for f in fs])
             ),
@@ -184,6 +211,12 @@ class ScenarioReport:
             "quality_ratio": self.geomean_quality_ratio,
             "quality_ref": self.quality_ref,
         }
+        # Degraded solves, visible without digging into per-report extras:
+        # total warning count always; the per-category tally when nonzero.
+        warnings = self.warning_counters()
+        row["warnings"] = warnings.total
+        if warnings:
+            row["warning_counts"] = warnings.export()
         if self.flowsim_reports:
             fs = self.flowsim_summary()
             row.update(
@@ -381,32 +414,38 @@ def run_scenario(
             spec.flowsim_params
         )
 
+    tracer = get_tracer()
     periods: list[PeriodResult] = []
     for t, rep in enumerate(reports):
-        demand_met = None
-        if simulate:
-            from ..fabric.simulator import simulate as sim
+        # "install" is the fabric handoff: the point the period's schedule
+        # leaves the solver and is replayed/recorded against the switches.
+        with tracer.span(
+            "period", {"period": t} if tracer.enabled else None
+        ), tracer.span("install", {"period": t} if tracer.enabled else None):
+            demand_met = None
+            if simulate:
+                from ..fabric.simulator import simulate as sim
 
-            demand_met = bool(
-                sim(rep, units[t], tol=options.tol(rep.backend)).demand_met
+                demand_met = bool(
+                    sim(rep, units[t], tol=options.tol(rep.backend)).demand_met
+                )
+            fs_report = None
+            if flowsim:
+                fs_report = simulate_flows(rep, units[t], options=fs_opts)
+            periods.append(
+                PeriodResult(
+                    period=t,
+                    makespan=rep.makespan,
+                    lower_bound=rep.lower_bound,
+                    gap=rep.optimality_gap,
+                    num_configs=rep.num_configs,
+                    cct_s=rep.makespan * unit_s if np.isfinite(unit_s) else float("nan"),
+                    meta=dict(trace.period_meta[t]),
+                    demand_met=demand_met,
+                    ref_makespan=ref_makespans[t],
+                    flowsim=fs_report,
+                )
             )
-        fs_report = None
-        if flowsim:
-            fs_report = simulate_flows(rep, units[t], options=fs_opts)
-        periods.append(
-            PeriodResult(
-                period=t,
-                makespan=rep.makespan,
-                lower_bound=rep.lower_bound,
-                gap=rep.optimality_gap,
-                num_configs=rep.num_configs,
-                cct_s=rep.makespan * unit_s if np.isfinite(unit_s) else float("nan"),
-                meta=dict(trace.period_meta[t]),
-                demand_met=demand_met,
-                ref_makespan=ref_makespans[t],
-                flowsim=fs_report,
-            )
-        )
     # Traces are uniform (T, n, n) stacks today, so this is 1 until
     # mixed-n multi-pod traces land; derived from the same bucketing
     # solve_many applied to the actual submission.
@@ -482,49 +521,58 @@ def _run_online(
         rows = _online_host_rows(trace, units, deltas, stateless, options)
     online_runtime_s = time.perf_counter() - t0
 
+    tracer = get_tracer()
     tol = options.tol("jax" if device else "numpy")
     periods: list[OnlinePeriod] = []
     installed = [None] * spec.s  # the reported replay chain
     for t, (sched, _marks, row) in enumerate(rows):
-        state = SwitchState(installed=installed)
-        cand, cand_marks = apply_reuse_order(sched, state)
-        cand_mk = float(effective_loads(cand, cand_marks).max())
-        base, base_marks = apply_reuse_order(stateless[t].schedule, state)
-        base_mk = float(effective_loads(base, base_marks).max())
-        if cand_mk <= base_mk:
-            chosen, marks, mk = cand, cand_marks, cand_mk
-        else:
-            chosen, marks, mk = base, base_marks, base_mk
-        reuse_count = int(marks.sum())
-        num_configs = chosen.num_configs()
-        d = float(deltas[t])
-        row = dict(
-            row,
-            makespan=mk,
-            stateless_makespan=float(stateless[t].makespan),
-            reuse_count=reuse_count,
-            delta_avoided=d * reuse_count,
-            delta_paid=d * (num_configs - reuse_count),
-            num_configs=num_configs,
-        )
-        if options.validate:
-            chosen.validate(units[t], tol=tol)
-        demand_met = None
-        if simulate:
-            from ..fabric.simulator import simulate as sim
+        with tracer.span(
+            "online.period", {"period": t} if tracer.enabled else None
+        ):
+            state = SwitchState(installed=installed)
+            cand, cand_marks = apply_reuse_order(sched, state)
+            cand_mk = float(effective_loads(cand, cand_marks).max())
+            base, base_marks = apply_reuse_order(stateless[t].schedule, state)
+            base_mk = float(effective_loads(base, base_marks).max())
+            if cand_mk <= base_mk:
+                chosen, marks, mk = cand, cand_marks, cand_mk
+            else:
+                chosen, marks, mk = base, base_marks, base_mk
+            reuse_count = int(marks.sum())
+            num_configs = chosen.num_configs()
+            d = float(deltas[t])
+            row = dict(
+                row,
+                makespan=mk,
+                stateless_makespan=float(stateless[t].makespan),
+                reuse_count=reuse_count,
+                delta_avoided=d * reuse_count,
+                delta_paid=d * (num_configs - reuse_count),
+                num_configs=num_configs,
+            )
+            with tracer.span(
+                "install", {"period": t} if tracer.enabled else None
+            ):
+                if options.validate:
+                    chosen.validate(units[t], tol=tol)
+                demand_met = None
+                if simulate:
+                    from ..fabric.simulator import simulate as sim
 
-            demand_met = bool(
-                sim(chosen, units[t], tol=tol, installed=installed).demand_met
+                    demand_met = bool(
+                        sim(
+                            chosen, units[t], tol=tol, installed=installed
+                        ).demand_met
+                    )
+                installed = advance_installed(chosen, state, marks)
+            periods.append(
+                OnlinePeriod(
+                    period=t,
+                    schedule=chosen,
+                    demand_met=demand_met,
+                    **row,
+                )
             )
-        installed = advance_installed(chosen, state, marks)
-        periods.append(
-            OnlinePeriod(
-                period=t,
-                schedule=chosen,
-                demand_met=demand_met,
-                **row,
-            )
-        )
     return periods, online_runtime_s, "scan" if device else "host"
 
 

@@ -1,166 +1,13 @@
 """SLO observability for the scheduling control plane.
 
-Serving a fabric means promising *when* schedules arrive, not just that
-they are optimal — so the control plane records per-stage latencies
-(submit→dispatch queue wait, device solve, install) as log-spaced
-histograms cheap enough to keep always-on, plus the counters an operator
-alarms on: admission verdicts (admitted / degraded / shed), cache tier
-hits, and sustained schedules/sec. Everything exports as a plain dict so
-``benchmarks/bench_serve.py`` can write it straight to JSON and CI can
-gate on the numbers.
+The implementation moved to ``repro.obs.metrics`` so serving, scenarios,
+and benchmarks share one metrics vocabulary; this module re-exports the
+serving-facing names unchanged for compatibility. Import from
+``repro.obs`` for new code.
 """
 
 from __future__ import annotations
 
-import math
-import time
-from dataclasses import dataclass, field
+from ..obs.metrics import STAGES, LatencyHistogram, ServeMetrics
 
-
-class LatencyHistogram:
-    """Fixed log-spaced latency histogram (seconds).
-
-    Bins span ``lo``..``hi`` with ``per_decade`` geometric bins per decade;
-    observations clamp into the edge bins, so no sample is ever dropped.
-    Quantiles interpolate within the winning bin (geometric), which is
-    accurate to one bin width — plenty for p50/p99 SLO gating — while
-    ``observe`` stays O(1) with no sample retention.
-    """
-
-    def __init__(
-        self,
-        lo: float = 1e-6,
-        hi: float = 100.0,
-        per_decade: int = 8,
-    ) -> None:
-        if not (0 < lo < hi):
-            raise ValueError(f"need 0 < lo < hi, got {lo}, {hi}")
-        self.lo = float(lo)
-        self.hi = float(hi)
-        decades = math.log10(hi / lo)
-        self._nbins = max(1, int(math.ceil(decades * per_decade)))
-        self._scale = self._nbins / math.log(hi / lo)
-        self._counts = [0] * self._nbins
-        self.count = 0
-        self.sum = 0.0
-        self.min = math.inf
-        self.max = -math.inf
-
-    def observe(self, seconds: float) -> None:
-        x = float(seconds)
-        self.count += 1
-        self.sum += x
-        self.min = min(self.min, x)
-        self.max = max(self.max, x)
-        if x <= self.lo:
-            b = 0
-        elif x >= self.hi:
-            b = self._nbins - 1
-        else:
-            b = min(int(self._scale * math.log(x / self.lo)), self._nbins - 1)
-        self._counts[b] += 1
-
-    def _edge(self, b: int) -> float:
-        return self.lo * math.exp(b / self._scale)
-
-    def percentile(self, p: float) -> float:
-        """p in [0, 100]; NaN when empty. Clamped to the observed min/max."""
-        if self.count == 0:
-            return math.nan
-        target = p / 100.0 * self.count
-        cum = 0
-        for b, c in enumerate(self._counts):
-            cum += c
-            if cum >= target:
-                # Geometric midpoint-ish interpolation inside the bin.
-                frac = 1.0 if c == 0 else 1.0 - (cum - target) / c
-                val = self._edge(b) * math.exp(frac / self._scale)
-                return min(max(val, self.min), self.max)
-        return self.max  # pragma: no cover - cum always reaches count
-
-    @property
-    def mean(self) -> float:
-        return self.sum / self.count if self.count else math.nan
-
-    def export(self) -> dict:
-        return {
-            "count": self.count,
-            "mean_s": self.mean,
-            "min_s": self.min if self.count else math.nan,
-            "max_s": self.max if self.count else math.nan,
-            "p50_s": self.percentile(50),
-            "p90_s": self.percentile(90),
-            "p99_s": self.percentile(99),
-        }
-
-
-# The per-request pipeline stages the server times. "queue_wait" is
-# submit→dispatch, "device" is dispatch→results-collected, "install" is the
-# OCS programming/ACK latency per installed batch, "e2e" is submit→installed.
-STAGES = ("queue_wait", "device", "install", "e2e")
-
-
-@dataclass
-class ServeMetrics:
-    """Always-on counters + stage histograms for one server instance."""
-
-    stages: dict[str, LatencyHistogram] = field(
-        default_factory=lambda: {name: LatencyHistogram() for name in STAGES}
-    )
-    admitted: int = 0
-    degraded: int = 0
-    shed: int = 0
-    cache_hit_exact: int = 0
-    cache_hit_support: int = 0
-    cache_miss: int = 0
-    batches: int = 0
-    schedules: int = 0
-    _t0: float = field(default_factory=time.perf_counter)
-
-    def observe(self, stage: str, seconds: float) -> None:
-        self.stages[stage].observe(seconds)
-
-    def count_verdict(self, verdict: str) -> None:
-        if verdict == "ADMIT":
-            self.admitted += 1
-        elif verdict == "DEGRADED":
-            self.degraded += 1
-        elif verdict == "SHED":
-            self.shed += 1
-        else:
-            raise ValueError(f"unknown admission verdict {verdict!r}")
-
-    @property
-    def cache_hits(self) -> int:
-        return self.cache_hit_exact + self.cache_hit_support
-
-    @property
-    def cache_hit_rate(self) -> float:
-        total = self.cache_hits + self.cache_miss
-        return self.cache_hits / total if total else math.nan
-
-    @property
-    def elapsed_s(self) -> float:
-        return time.perf_counter() - self._t0
-
-    @property
-    def schedules_per_sec(self) -> float:
-        dt = self.elapsed_s
-        return self.schedules / dt if dt > 0 else math.nan
-
-    def export(self) -> dict:
-        """JSON-safe snapshot: counters, rates, and per-stage histograms."""
-        return {
-            "admitted": self.admitted,
-            "degraded": self.degraded,
-            "shed": self.shed,
-            "cache_hit_exact": self.cache_hit_exact,
-            "cache_hit_support": self.cache_hit_support,
-            "cache_miss": self.cache_miss,
-            "cache_hit_rate": self.cache_hit_rate,
-            "batches": self.batches,
-            "schedules": self.schedules,
-            "elapsed_s": self.elapsed_s,
-            "schedules_per_sec": self.schedules_per_sec,
-            "stages": {k: h.export() for k, h in self.stages.items()},
-        }
+__all__ = ["STAGES", "LatencyHistogram", "ServeMetrics"]

@@ -37,9 +37,10 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from ..api import SolveOptions, SolveReport, solve_many
+from ..obs.metrics import ServeMetrics
+from ..obs.trace import get_tracer
 from .admission import ADMIT, SHED, AdmissionController
 from .cache import CacheResult, ScheduleCache
-from .metrics import ServeMetrics
 
 try:
     from ..api.jax_backend import PendingBatch, dispatch_many_jax
@@ -216,6 +217,15 @@ class ScheduleServer:
         return batch
 
     def _dispatch(self, batch: list[_Request]) -> _Inflight:
+        tracer = get_tracer()
+        dispatch_span = tracer.span(
+            "serve.dispatch",
+            {"batch": len(batch)} if tracer.enabled else None,
+        )
+        with dispatch_span:
+            return self._dispatch_inner(batch)
+
+    def _dispatch_inner(self, batch: list[_Request]) -> _Inflight:
         degraded = batch[0].degraded
         cached: list[tuple[_Request, CacheResult]] = []
         device: list[_Request] = []
@@ -262,6 +272,17 @@ class ScheduleServer:
         sleep releases the core, so in async mode the *next* flight's
         device solve proceeds underneath it.
         """
+        tracer = get_tracer()
+        install_span = tracer.span(
+            "serve.install",
+            {"device": len(flight.device_reqs), "cached": len(flight.cached)}
+            if tracer.enabled
+            else None,
+        )
+        with install_span:
+            self._install_inner(flight)
+
+    def _install_inner(self, flight: _Inflight) -> None:
         reports: list[SolveReport] = []
         if flight.pending is not None:
             reports = flight.pending.collect()
